@@ -1,0 +1,109 @@
+"""Paper Fig. 10 — the main scaling result: round latency vs agent count
+and the maximum number of agents sustained under a latency SLO across QPS
+levels, for all four systems (vLLM-recompute, vLLM+prefix, CacheBlend-PIC,
+TokenDance).
+
+Methodology: per-phase service times AND per-agent persistent memory are
+MEASURED on the real CPU engine; the (agents x QPS) grid is then evaluated
+with the capacity model in serving.scheduler, which combines
+  (a) compute: serial (N passes) vs collective (one pass) recovery, and
+  (b) memory: a fixed KV pool budget — agents over budget lose their
+      cached state and fall back to full recompute (the pool-saturation
+      mechanism of the paper's Fig. 2).
+The SLO is 3x the 2-agent TokenDance round and the QPS axis is scaled to
+this machine's measured capacity, so the comparison is hardware-scale-
+free; the pool budget is 6 dense caches, so prefix caching (N dense
+caches) saturates mid-sweep like the paper's A100 (Fig. 2).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Reporter, model
+from repro.core.rounds import generate_trace
+from repro.serving import MultiAgentEngine, ServiceTimes, simulate_round_latency
+
+MODES = ("recompute", "prefix", "pic", "tokendance")
+
+
+def _measure(cfg, params, mode: str, n_agents: int):
+    # agent_society regime: long histories + many long shared blocks, so
+    # prefill dominates the round (the paper's operating point; with
+    # short prompts reuse cannot beat one batched recompute prefill)
+    trace = generate_trace("agent_society", n_agents, 2, cfg.vocab_size,
+                           seed=5, jitter_hist=False)
+    eng = MultiAgentEngine(params, cfg, mode, gen_len=32,
+                           recompute_ratio=0.08)
+    stats = eng.run_trace(trace)
+    s = stats[-1]  # steady-state round (reuse active)
+    dense_bytes = s.transient_peak_bytes / n_agents  # one dense cache
+    return ServiceTimes(
+        per_request_recover=s.t_recover / n_agents,
+        collective_recover=s.t_recover,
+        decode=s.t_decode,
+        restore=s.t_restore,
+        store=s.t_store,
+        collective=mode in ("recompute", "tokendance"),  # batched paths
+        persistent_per_agent=s.persistent_bytes / n_agents,
+    ), s, dense_bytes
+
+
+def run(rep: Reporter, quick: bool = False) -> None:
+    cfg, params = model("qwen2.5-14b")   # deeper model: 2 fresh layers of 8
+    agent_counts = (2, 4) if quick else (2, 4, 6, 8)
+
+    measured, dense_one = {}, 0.0
+    recompute_round = {}
+    for m in MODES:
+        for n in agent_counts:
+            st, s, dense = _measure(cfg, params, m, n)
+            measured[(m, n)] = st
+            dense_one = max(dense_one, dense)
+            if m == "recompute":
+                recompute_round[n] = s.t_round
+    # memory fallback: evicted agents pay the recompute round
+    for (m, n), st in measured.items():
+        st.recompute_round = recompute_round[n]
+    # pool sized so prefix caching (N dense caches) saturates mid-sweep,
+    # like the paper's A100 does (Fig. 2); TokenDance's Master+Mirrors fit
+    pool_budget = 6 * dense_one
+
+    base = measured[("tokendance", agent_counts[0])]
+    slo = 3.0 * (base.collective_recover + base.decode + base.restore
+                 + base.store)
+    # offered load scaled to this machine: multiples of the recompute
+    # subrequest capacity (QPS axes are hardware-relative, like the
+    # paper's A100-specific 1-16 sweep)
+    cap0 = agent_counts[0] / (recompute_round[agent_counts[0]])
+    qps_levels = tuple(round(f * cap0, 2)
+                       for f in ((0.5, 2.0) if quick
+                                 else (0.25, 0.5, 1.0, 2.0, 4.0)))
+    grid = {}
+    for m in MODES:
+        for qps in qps_levels:
+            best = 0
+            for n in agent_counts:
+                lat = simulate_round_latency(
+                    measured[(m, n)], n, qps, pool_budget_bytes=pool_budget)
+                grid[(m, n, qps)] = lat
+                if lat <= slo:
+                    best = n
+            rep.add(f"fig10/{m}_max_agents_qps{qps}", best * 1e6 / 1e6,
+                    f"SLO={slo*1e3:.0f}ms pool={pool_budget/2**20:.0f}MiB")
+    # headline: best capacity ratio vs the strongest baseline across QPS
+    ratios = []
+    for qps in qps_levels:
+        td = max((n for n in agent_counts
+                  if grid[("tokendance", n, qps)] <= slo), default=0)
+        best_base = max(
+            (max((n for n in agent_counts if grid[(m, n, qps)] <= slo),
+                 default=0) for m in MODES if m != "tokendance"))
+        if best_base:
+            ratios.append((td / best_base, qps, td, best_base))
+    best = max(ratios) if ratios else (0, 0, 0, 0)
+    rep.add("fig10/capacity_ratio", best[0] * 1e6 / 1e6,
+            f"tokendance={best[2]} vs best-baseline={best[3]} agents at "
+            f"QPS={best[1]} (paper: up to 2.7x)")
+    rep.record("fig10", {f"{m}_{n}_{q}": v for (m, n, q), v in grid.items()})
+    rep.record("fig10_slo_s", slo)
+    rep.record("fig10_pool_bytes", pool_budget)

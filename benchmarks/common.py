@@ -1,0 +1,103 @@
+"""Shared benchmark infrastructure: models, traces, timing, CSV/JSON out."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import init_params, prefill
+
+OUT_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "experiments", "bench")
+
+_MODEL_CACHE: dict = {}
+
+
+def model(name: str = "qwen2.5-7b"):
+    """(cfg, params) for a reduced serving model (cached)."""
+    if name not in _MODEL_CACHE:
+        cfg = get_smoke_config(name).replace(dtype="float32")
+        _MODEL_CACHE[name] = (cfg, init_params(jax.random.PRNGKey(0), cfg))
+    return _MODEL_CACHE[name]
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds, jit-warmed."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+@dataclass
+class GroupInputs:
+    """A synthetic compatible All-Gather round group for direct collector
+    benchmarks (no engine): N agents, private prefix + shared blocks."""
+
+    tokens: jax.Array         # [N, S]
+    shared_k: jax.Array       # [L, S, KV, hd]
+    shared_v: jax.Array
+    src: jax.Array            # [S]
+    mask: jax.Array           # [S] bool
+    n_sel: int
+    S: int
+
+
+def make_group(cfg, params, n_agents: int, *, priv_len: int = 64,
+               block_len: int = 128, n_blocks: int | None = None,
+               ratio: float = 0.1, seed: int = 0) -> GroupInputs:
+    """Build one round: [private | O_1..O_k] with cached O_j from a
+    standalone prefill (positions 0..) — shared blocks land at different
+    offsets in the target prompt, exercising the RoPE realignment."""
+    from repro.core.pic import n_sel_for_blocks
+
+    n_blocks = n_blocks if n_blocks is not None else n_agents
+    key = jax.random.PRNGKey(seed)
+    shared_len = n_blocks * block_len
+    S = priv_len + shared_len
+    shared = jax.random.randint(key, (shared_len,), 0, cfg.vocab_size)
+    priv = jax.random.randint(jax.random.PRNGKey(seed + 1),
+                              (n_agents, priv_len), 0, cfg.vocab_size)
+    tokens = jnp.concatenate(
+        [priv, jnp.broadcast_to(shared[None], (n_agents, shared_len))], axis=1)
+    _, c = prefill(params, cfg, shared[None], max_len=shared_len)
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    sk = jnp.zeros((L, S, KV, hd)).at[:, priv_len:].set(c["k"][:, 0])
+    sv = jnp.zeros((L, S, KV, hd)).at[:, priv_len:].set(c["v"][:, 0])
+    src = jnp.arange(S, dtype=jnp.int32).at[priv_len:].set(
+        jnp.arange(shared_len))
+    mask = jnp.zeros(S, bool).at[priv_len:].set(True)
+    n_sel = n_sel_for_blocks(~np.asarray(mask), 32, ratio)
+    return GroupInputs(tokens, sk, sv, src, mask, n_sel, S)
+
+
+class Reporter:
+    """Collects rows and emits the ``name,us_per_call,derived`` CSV."""
+
+    def __init__(self):
+        self.rows: List[tuple] = []
+        self.payload: Dict[str, object] = {}
+
+    def add(self, name: str, us_per_call: float, derived: str = "") -> None:
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+    def record(self, key: str, obj) -> None:
+        self.payload[key] = obj
+
+    def save(self, name: str) -> None:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+            json.dump({"rows": self.rows, **self.payload}, f, indent=1,
+                      default=str)

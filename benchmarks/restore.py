@@ -1,0 +1,53 @@
+"""Paper Fig. 13 — Mirror restore latency: dense reconstruction (copy
+Master, overwrite blocks, separate paged write) vs the fused diff path
+(corrections applied inside the layerwise transfer). The paper reports
+1.3-2.6x in favour of fused."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Reporter, make_group, model, timed
+from repro.core.collector import KVCollector
+from repro.core.diff_store import build_round_family
+from repro.core.restore import dense_restore_paged, fused_restore_paged
+
+
+def run(rep: Reporter, quick: bool = False) -> None:
+    cfg, params = model()
+    agents = (3, 5) if quick else (3, 5, 10)
+    theta = cfg.rope_theta
+    speeds = {}
+    for n in agents:
+        g = make_group(cfg, params, n, priv_len=32, block_len=128,
+                       n_blocks=min(n, 8), ratio=0.05, seed=4)
+        coll = KVCollector(params, cfg, block_select=32, recompute_ratio=0.05)
+        ids = [f"a{i}" for i in range(n)]
+        res = coll.collective_reuse(ids, g.tokens, g.shared_k, g.shared_v,
+                                    g.src, g.mask, g.n_sel)
+        ks = jnp.swapaxes(res.pic.recovered_k, 0, 1)
+        vs = jnp.swapaxes(res.pic.recovered_v, 0, 1)
+        _, handles = build_round_family(ids, ks, vs, np.arange(g.S),
+                                        res.plan.master)
+        h = handles[0]
+        nb = -(-g.S // 32)
+        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+        pool_k = jnp.zeros((L, nb + 4, 32, KV, hd))
+        pool_v = jnp.zeros_like(pool_k)
+        slot = jnp.arange(nb, dtype=jnp.int32)
+
+        t_dense = timed(lambda: dense_restore_paged(h, theta, slot,
+                                                    pool_k, pool_v))
+        t_fused = timed(lambda: fused_restore_paged(h, theta, slot,
+                                                    pool_k, pool_v,
+                                                    use_kernel=False))
+        sp = t_dense / t_fused
+        speeds[n] = sp
+        rep.add(f"fig13/fused_restore_n{n}", t_fused * 1e6,
+                f"dense={t_dense*1e6:.0f}us speedup={sp:.2f}x "
+                f"diff_blocks={h.diff.n_blocks}/{h.diff.total_blocks}")
+    rep.add("fig13/speedup_range",
+            float(np.mean(list(speeds.values()))) * 1e6 / 1e6,
+            f"range {min(speeds.values()):.2f}-{max(speeds.values()):.2f}x "
+            f"(paper: 1.3-2.6x)")
+    rep.record("fig13", speeds)

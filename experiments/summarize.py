@@ -1,0 +1,74 @@
+"""Regenerate the EXPERIMENTS.md roofline/dry-run tables from the JSON
+records in experiments/dryrun/.
+
+  python experiments/summarize.py [--mesh pod16x16] [--variant baseline]
+"""
+import argparse
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def load(mesh: str, variant: str):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(HERE, "dryrun", "*.json"))):
+        r = json.load(open(p))
+        name = os.path.basename(p)[: -len(".json")]
+        parts = name.split("__")
+        v = parts[3] if len(parts) > 3 else "baseline"
+        if r.get("mesh") != mesh or v != variant:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt(x, digits=2):
+    return f"{x:.{digits}e}" if isinstance(x, float) else str(x)
+
+
+def roofline_table(rows):
+    print("| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+          "| bottleneck | useful | peak/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(rows, key=lambda r: (r["arch"], order[r["shape"]])):
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | FAIL | | | | | |")
+            continue
+        if "hlo_flops" not in r:
+            print(f"| {r['arch']} | {r['shape']} | (compile-only) | | | | | "
+                  f"{r['peak_device_bytes']/2**30:.2f} GiB |")
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {fmt(r['t_compute'])} "
+              f"| {fmt(r['t_memory'])} | {fmt(r['t_collective'])} "
+              f"| **{r['bottleneck']}** | {r['useful_ratio']:.2f} "
+              f"| {r['peak_device_bytes']/2**30:.2f} GiB |")
+
+
+def dryrun_table(rows):
+    print("| arch | shape | mesh | status | peak bytes/device | "
+          "collectives (extrapolated bytes/device) |")
+    print("|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(rows, key=lambda r: (r["arch"], order[r["shape"]])):
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | | |")
+            continue
+        coll = r.get("coll_breakdown", {})
+        cc = ", ".join(f"{k}={v:.2e}" for k, v in coll.items() if v) or "n/a"
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+              f"| {r['peak_device_bytes']/2**30:.2f} GiB | {cc} |")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16",
+                    choices=["pod16x16", "pod2x16x16"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--kind", default="roofline",
+                    choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+    rows = load(args.mesh, args.variant)
+    (roofline_table if args.kind == "roofline" else dryrun_table)(rows)

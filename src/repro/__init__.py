@@ -1,0 +1,4 @@
+"""repro — a JAX reproduction framework for TokenDance (CS.DC 2026):
+collective KV cache sharing for multi-agent LLM serving."""
+
+__version__ = "0.1.0"

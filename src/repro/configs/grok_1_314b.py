@@ -1,0 +1,34 @@
+"""Grok-1 314B — MoE, 8 experts top-2 [hf:xai-org/grok-1]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    arch_type="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131072,
+    n_experts=8,
+    top_k=2,
+    attn_logit_softcap=30.0,
+    long_context_window=8192,  # beyond-paper: SWA variant for long_500k
+    source="hf:xai-org/grok-1",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(
+        name="grok-smoke",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        n_experts=4,
+        top_k=2,
+    )

@@ -1,0 +1,150 @@
+"""KV Collector — collective KV cache reuse over an All-Gather round
+(paper §4.2, Fig. 7).
+
+Instead of N per-request reuse passes, the collector groups compatible
+requests and performs ONE shared RoPE alignment and ONE pooled
+important-position selection for the whole group; only the per-position
+refresh remains request-specific. The reuse plan it emits (group
+membership, per-request deviations, Master choice) is the bridge into
+Diff-Aware Storage (§4.3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.pic import PICResult, pic_prefill
+
+
+@dataclass
+class ReusePlan:
+    """Metadata bridging collective reuse to Diff-Aware Storage."""
+
+    request_ids: List[str]
+    master: int                  # index into request_ids
+    sel_idx: np.ndarray          # [n_sel] shared recomputed positions
+    deviations: np.ndarray       # [N] total per-request deviation
+    prompt_len: int
+    n_sel: int
+
+    def mirror_indices(self) -> List[int]:
+        return [i for i in range(len(self.request_ids)) if i != self.master]
+
+
+@dataclass
+class CollectiveResult:
+    plan: ReusePlan
+    pic: PICResult               # batched over the group
+
+
+@dataclass(frozen=True)
+class GroupKey:
+    """Compatibility key: same active prompt length + same cached-span
+    layout (the execution constraints from §4.2)."""
+
+    prompt_len: int
+    layout: Tuple[bool, ...]     # is_cached mask
+
+    @classmethod
+    def of(cls, prompt_len: int, is_cached: np.ndarray) -> "GroupKey":
+        return cls(prompt_len, tuple(bool(b) for b in is_cached))
+
+
+def group_compatible(
+    requests: Sequence[Tuple[str, int, np.ndarray]],
+) -> List[List[str]]:
+    """Group (request_id, prompt_len, is_cached) triples into compatible
+    sets; incompatible requests fall into their own group (single-request
+    fallback path)."""
+    groups: Dict[GroupKey, List[str]] = {}
+    for rid, plen, mask in requests:
+        groups.setdefault(GroupKey.of(plen, mask), []).append(rid)
+    return list(groups.values())
+
+
+class KVCollector:
+    """Drives collective (or serial baseline) PIC recovery for round groups."""
+
+    def __init__(self, params: dict, cfg: ModelConfig, *, check_layer: int = 1,
+                 recompute_ratio: float = 0.15, block_select: int = 0,
+                 pooled_selection: bool = False, shard=None):
+        from repro.models.layers import _noshard
+        self.params = params
+        self.cfg = cfg
+        self.check_layer = min(check_layer, cfg.n_layers - 1)
+        self.recompute_ratio = recompute_ratio
+        self.block_select = block_select
+        self.pooled_selection = pooled_selection
+        self.shard = shard or _noshard
+        # jit caches keyed by (S, n_sel, share)
+        self._jit_cache: dict = {}
+
+    # ------------------------------------------------------------------
+    def _runner(self, S: int, n_sel: int, share: bool, has_priv: bool):
+        key = (S, n_sel, share, has_priv)
+        if key not in self._jit_cache:
+            def run(params, tokens, ck, cv, src, shared_mask,
+                    pk=None, pv=None, psrc=None, pmask=None):
+                return pic_prefill(
+                    params, self.cfg, tokens, ck, cv, src, shared_mask,
+                    n_sel, priv_k=pk, priv_v=pv, priv_src=psrc,
+                    priv_mask=pmask, check_layer=self.check_layer,
+                    pooled_selection=share and self.pooled_selection,
+                    block_select=self.block_select, shard=self.shard)
+            self._jit_cache[key] = jax.jit(run)
+        return self._jit_cache[key]
+
+    # ------------------------------------------------------------------
+    def collective_reuse(
+        self,
+        request_ids: List[str],
+        tokens: jax.Array,          # [N, S]
+        cached_k: jax.Array,        # [L, S, KV, hd]
+        cached_v: jax.Array,
+        src_pos: jax.Array,         # [S]
+        shared_mask: jax.Array,     # [S]
+        n_sel: int,
+        priv: Optional[tuple] = None,  # (pk [N,L,S,KV,hd], pv, psrc [N,S], pmask [S])
+    ) -> CollectiveResult:
+        """One collective pass for the whole round group (T3 path, Fig. 7)."""
+        N, S = tokens.shape
+        args = priv if priv is not None else ()
+        res = self._runner(S, n_sel, True, priv is not None)(
+            self.params, tokens, cached_k, cached_v, src_pos, shared_mask,
+            *args)
+        dev = np.asarray(jnp.sum(
+            jnp.where(shared_mask[None], res.deviation, 0.0), axis=1))
+        master = int(np.argmin(dev))  # closest to the group's common structure
+        plan = ReusePlan(list(request_ids), master,
+                         np.asarray(res.sel_idx[0]), dev, S, n_sel)
+        return CollectiveResult(plan, res)
+
+    # ------------------------------------------------------------------
+    def serial_reuse(
+        self,
+        request_ids: List[str],
+        tokens: jax.Array,
+        cached_k: jax.Array,
+        cached_v: jax.Array,
+        src_pos: jax.Array,
+        shared_mask: jax.Array,
+        n_sel: int,
+        priv: Optional[tuple] = None,
+    ) -> List[PICResult]:
+        """Per-request baseline (T2 path): N independent reuse passes, each
+        repeating RoPE alignment and important-position selection."""
+        out = []
+        run = self._runner(tokens.shape[1], n_sel, False, priv is not None)
+        for i in range(tokens.shape[0]):
+            args = ()
+            if priv is not None:
+                pk, pv, psrc, pmask = priv
+                args = (pk[i : i + 1], pv[i : i + 1], psrc[i : i + 1], pmask)
+            out.append(run(self.params, tokens[i : i + 1], cached_k, cached_v,
+                           src_pos, shared_mask, *args))
+        return out

@@ -1,0 +1,302 @@
+"""Position-independent caching (PIC) with CacheBlend-style selective
+recomputation (paper §2.2), used as the per-position recovery backend for
+collective reuse (§4.2).
+
+Given a prompt whose segments have cached KV computed at *other* absolute
+positions, the recovery pipeline is:
+
+  1. RoPE-align cached keys from their source positions to the target
+     positions (rotation composes, so one extra rotation suffices). The
+     SHARED blocks are identical for every request in an All-Gather round,
+     so their alignment is performed once per group; private (history)
+     caches are aligned per request — that work is inherently private in
+     both TokenDance and the per-request baseline.
+  2. Run the first ``check_layer + 1`` layers fully fresh and measure the
+     key deviation ||K_fresh - K_cached||^2 on the check layer.
+  3. Select the ``n_sel`` most deviating positions (fresh positions are
+     always selected) and recompute ONLY those through the remaining
+     layers, attending over the merged (aligned + recomputed) KV.
+
+The result is one recovered KV cache per request in which unselected
+positions carry the aligned cached values — the structural source of the
+cross-agent similarity that Diff-Aware Storage exploits.
+
+TokenDance's collective path batches the whole round group into one call:
+one shared RoPE alignment of the shared blocks and one batched
+important-position pass identify each request's positions simultaneously,
+so the per-round reuse overhead is paid once (paper §4.2). Outputs are
+bit-identical to per-request recovery (paper §6.6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    _noshard,
+    apply_rope,
+    gqa_attention,
+    moe_block,
+    rmsnorm,
+    rope_cos_sin,
+    rope_shift,
+    swiglu_mlp,
+)
+from repro.models.transformer import _logits
+
+BIG = 1.0e30
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PICResult:
+    """Output of one recovery pass (batched over a request group)."""
+
+    recovered_k: jax.Array   # [L, B, S, KV, hd]
+    recovered_v: jax.Array   # [L, B, S, KV, hd]
+    deviation: jax.Array     # [B, S]   check-layer key deviation (0 at fresh)
+    sel_idx: jax.Array       # [B, n_sel] recomputed positions (sorted)
+    logits: jax.Array        # [B, V]   last-position logits
+    hidden_sel: jax.Array    # [B, n_sel, D] final hidden at selected positions
+
+
+def _layer(params: dict, l: int) -> dict:
+    return jax.tree.map(lambda a: a[l], params["blocks"])
+
+
+def align_cached_keys(cached_k: jax.Array, src_pos: jax.Array,
+                      tgt_pos: jax.Array, theta: float) -> jax.Array:
+    """RoPE-align cached keys [L, S, KV, hd] from src to target positions.
+
+    This is the operation TokenDance performs ONCE per round group for the
+    shared blocks; the per-request baseline repeats it per agent.
+    """
+    return jax.vmap(lambda k: rope_shift(k, src_pos, tgt_pos, theta))(cached_k)
+
+
+def _fresh_block(h, p, cfg, positions, cos, sin, shard):
+    """One standard full-attention block; returns (h, k, v)."""
+    from repro.models.layers import attention_block
+
+    x = rmsnorm(h, p["ln1"], cfg.rmsnorm_eps)
+    S = h.shape[1]
+    a_out, (k, v) = attention_block(
+        x, p["attn"], cfg=cfg, positions=positions, window=S,
+        cos=cos, sin=sin, shard=shard)
+    h = h + a_out
+    x2 = rmsnorm(h, p["ln2"], cfg.rmsnorm_eps)
+    if cfg.is_moe:
+        m, _ = moe_block(x2, p["moe"], cfg=cfg, shard=shard)
+        h = h + m
+    else:
+        h = h + swiglu_mlp(x2, p["mlp"], shard)
+    return h, k, v
+
+
+def _selective_block(h_sel, p, cfg, *, sel_pos, cos_sel, sin_sel,
+                     k_base, v_base, sel_idx, shard):
+    """Recompute one layer at the selected positions only.
+
+    h_sel: [B, n, D]; k_base/v_base: [B, S, KV, hd] (aligned cache); the
+    fresh K/V of the selected tokens are scattered into the base before
+    attention. Returns (h_sel', k_merged, v_merged).
+    """
+    B, n, D = h_sel.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    x = rmsnorm(h_sel, p["ln1"], cfg.rmsnorm_eps)
+    ap = p["attn"]
+    q = jnp.einsum("bnd,dhk->bnhk", x, ap["wq"].reshape(D, H, hd))
+    k = jnp.einsum("bnd,dhk->bnhk", x, ap["wk"].reshape(D, KV, hd))
+    v = jnp.einsum("bnd,dhk->bnhk", x, ap["wv"].reshape(D, KV, hd))
+    if "bq" in ap:
+        q = q + ap["bq"].reshape(H, hd)
+        k = k + ap["bk"].reshape(KV, hd)
+        v = v + ap["bv"].reshape(KV, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, ap["q_norm"], cfg.rmsnorm_eps)
+        k = rmsnorm(k, ap["k_norm"], cfg.rmsnorm_eps)
+    q = apply_rope(q, cos_sel, sin_sel)
+    k = apply_rope(k, cos_sel, sin_sel)
+
+    def scatter(base_b, vals_b, idx_b):
+        return base_b.at[idx_b].set(vals_b)
+
+    k_merged = jax.vmap(scatter)(k_base, k, sel_idx)
+    v_merged = jax.vmap(scatter)(v_base, v, sel_idx)
+
+    S = k_base.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    out = gqa_attention(q, k_merged, v_merged, q_pos=sel_pos, kv_pos=kv_pos,
+                        window=S, softcap=cfg.attn_logit_softcap)
+    out = jnp.einsum("bnhk,hkd->bnd", out, ap["wo"].reshape(H, hd, D))
+    h_sel = h_sel + shard(out, "act_resid")
+    x2 = rmsnorm(h_sel, p["ln2"], cfg.rmsnorm_eps)
+    if cfg.is_moe:
+        m, _ = moe_block(x2, p["moe"], cfg=cfg, shard=shard)
+        h_sel = h_sel + m
+    else:
+        h_sel = h_sel + swiglu_mlp(x2, p["mlp"], shard)
+    return h_sel, k_merged, v_merged
+
+
+def pic_prefill(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,        # [B, S] int32 — the request group
+    shared_k: jax.Array,      # [L, S, KV, hd] — group-shared cached keys
+    shared_v: jax.Array,      # [L, S, KV, hd]
+    shared_src: jax.Array,    # [S] int32 — source positions of shared values
+    shared_mask: jax.Array,   # [S] bool — shared-cached positions
+    n_sel: int,               # static: number of recomputed positions
+    *,
+    priv_k: Optional[jax.Array] = None,    # [B, L, S, KV, hd]
+    priv_v: Optional[jax.Array] = None,
+    priv_src: Optional[jax.Array] = None,  # [B, S]
+    priv_mask: Optional[jax.Array] = None,  # [S] bool
+    check_layer: int = 1,
+    pooled_selection: bool = False,
+    block_select: int = 0,
+    shard=_noshard,
+) -> PICResult:
+    """CacheBlend-style recovery for a group of requests (see module doc).
+
+    Selection is per-request but computed in ONE batched pass for the
+    whole group (the paper's collective semantics — outputs are identical
+    to per-request PIC, only the execution is grouped). The per-request
+    baseline calls this with B=1 per agent, paying N passes.
+
+    ``block_select`` > 0 selects whole token blocks of that size instead of
+    scattered tokens (EPIC-style). This is the TPU-tile-aligned variant:
+    recomputed positions then cluster into contiguous blocks, so the
+    Mirror diffs of Diff-Aware Storage stay block-sparse (paper §4.3's
+    clustering assumption made structural). ``n_sel`` must be a multiple
+    of ``block_select`` and large enough to cover every fresh-token block.
+    """
+    assert cfg.has_attention and not cfg.has_ssm, \
+        "PIC applies to attention KV caches only (see DESIGN.md §5)"
+    B, S = tokens.shape
+    L = cfg.n_layers
+    theta = cfg.rope_theta
+    tgt_pos = jnp.arange(S, dtype=jnp.int32)
+    is_cached = shared_mask if priv_mask is None else (shared_mask | priv_mask)
+
+    # ---- 1. alignment ------------------------------------------------------
+    # shared blocks: ONE rotation for the whole group
+    aligned_k = align_cached_keys(shared_k, shared_src, tgt_pos, theta)
+    base_k = jnp.broadcast_to(aligned_k[:, None], (L, B, S) + aligned_k.shape[-2:])
+    base_v = jnp.broadcast_to(shared_v[:, None], base_k.shape)
+    if priv_k is not None:
+        # private caches: per-request rotation (inherently private work)
+        al_priv = jax.vmap(  # over batch
+            lambda pk, ps: align_cached_keys(pk, ps, tgt_pos, theta)
+        )(priv_k, priv_src)
+        pm = priv_mask[None, None, :, None, None]
+        base_k = jnp.where(pm, jnp.swapaxes(al_priv, 0, 1), base_k)
+        base_v = jnp.where(pm, jnp.swapaxes(priv_v, 0, 1), base_v)
+
+    # ---- 2. fresh pass over the first check_layer+1 layers ---------------
+    h = jnp.take(params["embed"], tokens, axis=0).astype(shared_k.dtype)
+    positions = jnp.broadcast_to(tgt_pos[None], (B, S))
+    cos, sin = rope_cos_sin(positions, cfg.resolved_head_dim, theta)
+    fresh_k, fresh_v = [], []
+    for l in range(check_layer + 1):
+        h, k, v = _fresh_block(h, _layer(params, l), cfg, positions, cos, sin, shard)
+        fresh_k.append(k)
+        fresh_v.append(v)
+
+    # ---- 3. importance selection on the check layer -----------------------
+    dk = fresh_k[check_layer].astype(jnp.float32) - \
+        base_k[check_layer].astype(jnp.float32)
+    deviation = jnp.sum(dk * dk, axis=(-1, -2))            # [B, S]
+    deviation = jnp.where(is_cached[None], deviation, 0.0)
+    scores = jnp.where(is_cached[None], deviation, BIG)    # fresh always win
+    scores = scores.at[:, S - 1].add(2 * BIG)              # last token always
+    if pooled_selection:
+        # beyond-paper option: ONE pooled set for the whole group. Aligns
+        # every mirror's diff blocks with the master's recomputed blocks
+        # (higher compression) at the cost of deviating from per-request
+        # PIC output equivalence. Off by default (paper semantics).
+        scores = jnp.broadcast_to(
+            jnp.mean(scores, axis=0, keepdims=True), scores.shape)
+    if block_select:
+        bt = block_select
+        assert n_sel % bt == 0, "n_sel must be a multiple of block_select"
+        nb_sel = n_sel // bt
+        pad = (-S) % bt
+        bscores = jnp.pad(scores, ((0, 0), (0, pad))).reshape(B, -1, bt)
+        bscores = jnp.sum(bscores, axis=-1)                # [B, nb]
+        _, bidx = jax.lax.top_k(bscores, nb_sel)           # [B, nb_sel]
+        idx = (bidx[:, :, None] * bt
+               + jnp.arange(bt, dtype=bidx.dtype)[None, None, :])
+        idx = jnp.minimum(idx.reshape(B, n_sel), S - 1)    # clip padded tail
+        sel_idx = jnp.sort(idx, axis=-1)
+    else:
+        _, idx = jax.lax.top_k(scores, n_sel)              # per-request pass
+        sel_idx = jnp.sort(idx, axis=-1)
+
+    # ---- 4. selective recomputation through the remaining layers ---------
+    rec_k, rec_v = base_k, base_v
+
+    def scatter_rows(base, vals, idx):
+        return jax.vmap(lambda b, v_, i: b.at[i].set(v_))(base, vals, idx)
+
+    # layers <= check: keep aligned values except at selected rows (fresh)
+    for l in range(check_layer + 1):
+        sel_k = jnp.take_along_axis(
+            fresh_k[l], sel_idx[:, :, None, None], axis=1)
+        sel_v = jnp.take_along_axis(
+            fresh_v[l], sel_idx[:, :, None, None], axis=1)
+        rec_k = rec_k.at[l].set(scatter_rows(rec_k[l], sel_k, sel_idx))
+        rec_v = rec_v.at[l].set(scatter_rows(rec_v[l], sel_v, sel_idx))
+
+    sel_pos = jnp.take_along_axis(positions, sel_idx, axis=1)  # [B, n_sel]
+    cos_sel, sin_sel = rope_cos_sin(sel_pos, cfg.resolved_head_dim, theta)
+    h_sel = jnp.take_along_axis(h, sel_idx[:, :, None], axis=1)
+
+    for l in range(check_layer + 1, L):
+        h_sel, k_m, v_m = _selective_block(
+            h_sel, _layer(params, l), cfg, sel_pos=sel_pos,
+            cos_sel=cos_sel, sin_sel=sin_sel,
+            k_base=rec_k[l], v_base=rec_v[l], sel_idx=sel_idx, shard=shard)
+        rec_k = rec_k.at[l].set(k_m)
+        rec_v = rec_v.at[l].set(v_m)
+
+    # ---- 5. last-token logits --------------------------------------------
+    is_last = sel_idx == (S - 1)                            # [B, n_sel]
+    row = jnp.argmax(is_last, axis=1)
+    h_last = jnp.take_along_axis(h_sel, row[:, None, None], axis=1)
+    logits = _logits(params, cfg, h_last, shard)[:, 0]
+
+    return PICResult(rec_k, rec_v, deviation, sel_idx, logits, h_sel)
+
+
+def n_sel_for(layout_fresh: int, n_cached: int, ratio: float) -> int:
+    """Static selected-set size: every fresh position + ratio of cached."""
+    import math
+    return layout_fresh + max(1, int(math.ceil(ratio * n_cached)))
+
+
+def n_sel_for_blocks(fresh_mask, bt: int, ratio: float) -> int:
+    """Static selected-set size for block-granular selection.
+
+    Counts the blocks containing any fresh token (always selected) plus
+    ``ratio`` of the pure-cached blocks, and returns it in tokens.
+    """
+    import math
+
+    import numpy as np
+    fm = np.asarray(fresh_mask, bool).copy()
+    S = fm.shape[0]
+    pad = (-S) % bt
+    fm = np.pad(fm, (0, pad))
+    # block containing the last token is always selected (logits)
+    fm[S - 1] = True
+    blocks = fm.reshape(-1, bt).any(axis=1)
+    n_fresh_blocks = int(blocks.sum())
+    n_cached_blocks = int(blocks.size - n_fresh_blocks)
+    nb_sel = n_fresh_blocks + max(1, math.ceil(ratio * n_cached_blocks))
+    return min(nb_sel, blocks.size) * bt

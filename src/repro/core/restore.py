@@ -1,0 +1,173 @@
+"""Mirror restore paths (paper §4.4, Algorithm 1).
+
+Two implementations with identical semantics:
+
+* :func:`dense_restore` — the naive baseline: materialize a dense copy of
+  the Master, overwrite the differing blocks, then RoPE-recover positions.
+  An extra full write-then-read round trip for an object the system never
+  keeps.
+* :func:`fused_restore` — applies the block-sparse corrections inside the
+  layerwise transfer that already moves cached KV into paged memory (the
+  Pallas kernel in ``repro.kernels.diff_restore``; its grid pipeline plays
+  the role of the CUDA ping-pong buffers).
+
+Both return the mirror's K/V laid out into destination pages through a
+slot map, so they drop into the engine's paged KV pool.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.diff_store import MirrorHandle, _pad_to_blocks
+from repro.models.layers import rope_shift
+
+
+def _delta_pos(diff) -> Optional[jax.Array]:
+    old = np.asarray(diff.old_pos)
+    new = np.asarray(diff.new_pos)
+    if np.array_equal(old, new):
+        return None
+    return jnp.asarray(new - old, jnp.int32)
+
+
+def dense_restore(handle: MirrorHandle, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """Naive path: dense Master copy -> overwrite diff blocks -> RoPE.
+
+    Returns (k, v) of shape [L, S, KV, hd].
+    """
+    diff = handle.diff
+    bt = diff.block_tokens
+    mk = _pad_to_blocks(handle.master.k, bt)
+    mv = _pad_to_blocks(handle.master.v, bt)
+    L, Sp, KV, hd = mk.shape
+    nb = Sp // bt
+    kb = mk.reshape(L, nb, bt, KV, hd)
+    vb = mv.reshape(L, nb, bt, KV, hd)
+    idx = jnp.asarray(diff.block_idx)
+    # dense materialization (the write-then-read the paper eliminates)
+    kb = kb.at[:, idx].set(diff.k_vals)
+    vb = vb.at[:, idx].set(diff.v_vals)
+    k = kb.reshape(L, Sp, KV, hd)[:, : diff.seq_len]
+    v = vb.reshape(L, Sp, KV, hd)[:, : diff.seq_len]
+    dp = _delta_pos(diff)
+    if dp is not None:
+        zero = jnp.zeros_like(dp)
+        k = jax.vmap(lambda kl: rope_shift(kl, zero, dp, theta))(k)
+    return k, v
+
+
+def dense_restore_paged(handle: MirrorHandle, theta: float,
+                        slot_map: jax.Array, pool_k: jax.Array,
+                        pool_v: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Dense restore followed by a separate scatter into paged memory —
+    the two-step baseline of Fig. 13 (dashed lines)."""
+    diff = handle.diff
+    bt = diff.block_tokens
+    k, v = dense_restore(handle, theta)
+    L, S, KV, hd = k.shape
+    kpad = _pad_to_blocks(k, bt)
+    vpad = _pad_to_blocks(v, bt)
+    nb = kpad.shape[1] // bt
+    kb = kpad.reshape(L, nb, bt, KV, hd)
+    vb = vpad.reshape(L, nb, bt, KV, hd)
+    sm = jnp.asarray(slot_map)
+    pool_k = pool_k.at[:, sm].set(kb)
+    pool_v = pool_v.at[:, sm].set(vb)
+    return pool_k, pool_v
+
+
+def dense_restore_batch(handles, theta: float):
+    """Restore ALL of a round family's mirrors in one vectorized call.
+
+    Diffs are padded to the family's max block count by repeating block 0
+    (scatter of identical values is idempotent), then restored with a
+    single vmapped scatter — removing the per-mirror python loop from the
+    critical path (serving-layer perf iteration, EXPERIMENTS.md §Perf).
+    Requires aligned frames (in-family mirrors share positions).
+    Returns (k [M, L, S, KV, hd], v [M, L, S, KV, hd]).
+    """
+    assert handles, "empty family"
+    master = handles[0].master
+    bt = handles[0].diff.block_tokens
+    mk = _pad_to_blocks(master.k, bt)
+    mv = _pad_to_blocks(master.v, bt)
+    L, Sp, KV, hd = mk.shape
+    nb = Sp // bt
+    kb = mk.reshape(L, nb, bt, KV, hd)
+    vb = mv.reshape(L, nb, bt, KV, hd)
+
+    nmax = max(1, max(h.diff.n_blocks for h in handles))
+    idxs, kvals, vvals = [], [], []
+    for h in handles:
+        d = h.diff
+        assert np.array_equal(d.old_pos, d.new_pos), \
+            "batched restore requires aligned frames"
+        pad = nmax - d.n_blocks
+        if pad:
+            # repeat the first present block (or block 0 with its own
+            # master values — an idempotent overwrite)
+            if d.n_blocks:
+                idx = np.concatenate([d.block_idx,
+                                      np.repeat(d.block_idx[:1], pad)])
+                kv = jnp.concatenate([d.k_vals, jnp.repeat(
+                    d.k_vals[:, :1], pad, axis=1)], axis=1)
+                vv = jnp.concatenate([d.v_vals, jnp.repeat(
+                    d.v_vals[:, :1], pad, axis=1)], axis=1)
+            else:
+                idx = np.zeros(nmax, np.int32)
+                kv = jnp.broadcast_to(kb[:, :1], (L, nmax, bt, KV, hd))
+                vv = jnp.broadcast_to(vb[:, :1], (L, nmax, bt, KV, hd))
+        else:
+            idx, kv, vv = d.block_idx, d.k_vals, d.v_vals
+        idxs.append(idx)
+        kvals.append(kv)
+        vvals.append(vv)
+    idx_b = jnp.asarray(np.stack(idxs))               # [M, nmax]
+    kv_b = jnp.stack(kvals)                           # [M, L, nmax, ...]
+    vv_b = jnp.stack(vvals)
+
+    def one(idx, kv, vv):
+        return kb.at[:, idx].set(kv), vb.at[:, idx].set(vv)
+
+    k_all, v_all = jax.vmap(one)(idx_b, kv_b, vv_b)
+    S = handles[0].diff.seq_len
+    return (k_all.reshape(-1, L, Sp, KV, hd)[:, :, :S],
+            v_all.reshape(-1, L, Sp, KV, hd)[:, :, :S])
+
+
+def fused_restore_paged(handle: MirrorHandle, theta: float,
+                        slot_map: jax.Array, pool_k: jax.Array,
+                        pool_v: jax.Array,
+                        *, use_kernel: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Algorithm 1: per-layer transfer that applies the block-sparse diff
+    and the RoPE position recovery in the same pass that writes the paged
+    pool. No dense Mirror is ever materialized."""
+    from repro.kernels import ops
+
+    diff = handle.diff
+    bt = diff.block_tokens
+    mk = _pad_to_blocks(handle.master.k, bt)
+    mv = _pad_to_blocks(handle.master.v, bt)
+    L, Sp, KV, hd = mk.shape
+    nb = Sp // bt
+    # diff_slot[b] = row of the diff values for block b, or -1
+    diff_slot = np.full((nb,), -1, np.int32)
+    diff_slot[np.asarray(diff.block_idx)] = np.arange(diff.n_blocks)
+    dp = _delta_pos(diff)
+    if dp is None:
+        dp = jnp.zeros((Sp,), jnp.int32)
+    else:
+        dp = jnp.pad(dp, (0, Sp - dp.shape[0]))
+
+    kb = mk.reshape(L, nb, bt, KV, hd)
+    vb = mv.reshape(L, nb, bt, KV, hd)
+    new_k, new_v = ops.fused_diff_restore(
+        kb, vb, diff.k_vals, diff.v_vals,
+        jnp.asarray(diff_slot), jnp.asarray(slot_map),
+        dp.reshape(nb, bt), theta,
+        pool_k, pool_v, use_kernel=use_kernel)
+    return new_k, new_v

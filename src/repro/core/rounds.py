@@ -1,0 +1,128 @@
+"""All-Gather round abstraction (paper §2.1) and synthetic workload traces.
+
+A round: every agent holds a private history H_i, the scheduler gathers
+the previous round's output blocks O = {O_1..O_N} and each agent's next
+prompt is ``H_i || Π_i(O)`` (+ a round task). Traces model the paper's two
+evaluation workloads:
+
+* ``generative_agents`` — shorter private histories, fewer agents/round
+* ``agent_society``     — longer histories, more agents
+
+Output blocks are either taken from the trace (replay mode) or generated
+by the engine (greedy decode) so accuracy divergence can compound across
+rounds like in the paper's Fig. 14.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.segments import (
+    PRIVATE,
+    SHARED,
+    TASK,
+    Segment,
+    aligned_segment,
+    build_prompt,
+)
+
+WORKLOADS = {
+    # (init history len, per-round task len, output block len)
+    "generative_agents": dict(hist_len=64, task_len=16, out_len=32),
+    "agent_society": dict(hist_len=192, task_len=24, out_len=48),
+}
+
+
+@dataclass
+class AgentState:
+    agent_id: str
+    history: np.ndarray          # int32 private history tokens
+
+    def extend_history(self, tokens: np.ndarray) -> None:
+        self.history = np.concatenate([self.history, np.asarray(tokens, np.int32)])
+
+
+@dataclass
+class Round:
+    """One synchronized round: shared blocks + per-agent tasks."""
+
+    index: int
+    shared_blocks: List[np.ndarray]      # previous round outputs O^{t-1}
+    tasks: Dict[str, np.ndarray]         # per-agent round task tokens
+
+
+@dataclass
+class AllGatherTrace:
+    workload: str
+    agent_ids: List[str]
+    rounds: List[Round]
+    vocab_size: int
+    sep_id: int
+    init_histories: Dict[str, np.ndarray]
+    out_len: int
+
+
+def generate_trace(
+    workload: str,
+    n_agents: int,
+    n_rounds: int,
+    vocab_size: int,
+    *,
+    seed: int = 0,
+    sep_id: Optional[int] = None,
+    jitter_hist: bool = True,
+) -> AllGatherTrace:
+    """Build a deterministic synthetic trace of All-Gather rounds."""
+    spec = WORKLOADS[workload]
+    rng = np.random.default_rng(seed)
+    sep = vocab_size - 1 if sep_id is None else sep_id
+
+    def toks(n):
+        return rng.integers(0, vocab_size - 1, size=n).astype(np.int32)
+
+    agent_ids = [f"agent{i}" for i in range(n_agents)]
+    inits = {}
+    for i, aid in enumerate(agent_ids):
+        # private histories differ in length -> shared blocks land at
+        # different absolute positions (the core of the All-Gather problem)
+        extra = int(rng.integers(0, spec["out_len"])) if jitter_hist else 0
+        inits[aid] = toks(spec["hist_len"] + extra)
+
+    rounds = []
+    for r in range(n_rounds):
+        shared = [toks(spec["out_len"]) for _ in range(n_agents)] if r else []
+        tasks = {aid: toks(spec["task_len"]) for aid in agent_ids}
+        rounds.append(Round(r, shared, tasks))
+    return AllGatherTrace(workload, agent_ids, rounds, vocab_size, sep,
+                          inits, spec["out_len"])
+
+
+def round_prompt(
+    state: AgentState,
+    shared_blocks: Sequence[np.ndarray],
+    task: np.ndarray,
+    sep_id: int,
+    *,
+    layout_order: Optional[Sequence[int]] = None,
+    align_blocks: int = 0,
+):
+    """Assemble agent *i*'s prompt ``H_i || Π_i(O) || task`` (Fig. 1/6).
+
+    ``align_blocks`` > 0 pads every segment to whole KV blocks and omits
+    physical separators (block boundaries mark segments; the pad token is
+    ``sep_id``). See segments.build_prompt.
+    """
+    order = list(range(len(shared_blocks))) if layout_order is None else list(layout_order)
+    if align_blocks:
+        mk = lambda t, kind: aligned_segment(t, kind, align_blocks, sep_id)
+        segs = [mk(state.history, PRIVATE)]
+        segs += [mk(shared_blocks[j], SHARED) for j in order]
+        segs.append(mk(task, TASK))
+        return build_prompt(segs, None)
+    segs = [Segment(tuple(int(t) for t in state.history), PRIVATE)]
+    for j in order:
+        segs.append(Segment(tuple(int(t) for t in shared_blocks[j]), SHARED))
+    segs.append(Segment(tuple(int(t) for t in task), TASK))
+    return build_prompt(segs, sep_id)

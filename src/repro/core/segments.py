@@ -1,0 +1,189 @@
+"""Round-aware prompt interface (paper §4.1).
+
+Multi-agent prompts are assembled from logical blocks — a private history,
+the shared output blocks of the previous round, and the round task — with a
+reserved ``<TTSEP>`` separator token between adjacent blocks. Keeping the
+block structure visible lets the runtime switch from fixed-size chunk
+hashing to *segment-based* hashing: two prompts containing the same shared
+update map it to the same cache object even when their private histories
+differ in length.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+PRIVATE = "private"
+SHARED = "shared"
+TASK = "task"
+
+
+def segment_hash(tokens: Sequence[int]) -> str:
+    """Content hash of a token segment (position-independent identity)."""
+    arr = np.asarray(tokens, np.int32)
+    return hashlib.sha1(arr.tobytes()).hexdigest()
+
+
+@dataclass(frozen=True)
+class Segment:
+    """One logical block of a prompt."""
+
+    tokens: Tuple[int, ...]
+    kind: str  # PRIVATE | SHARED | TASK
+
+    @property
+    def sid(self) -> str:
+        return segment_hash(self.tokens)
+
+    def __len__(self) -> int:
+        return len(self.tokens)
+
+
+@dataclass(frozen=True)
+class Span:
+    """A segment's placement inside one tokenized prompt."""
+
+    start: int          # first token index (inclusive)
+    end: int            # last token index (exclusive)
+    kind: str
+    sid: str
+
+    def __len__(self) -> int:
+        return self.end - self.start
+
+
+@dataclass
+class PromptLayout:
+    """Tokenized prompt + per-segment spans (separators are not in spans)."""
+
+    tokens: np.ndarray            # int32 [S]
+    spans: List[Span]
+
+    @property
+    def length(self) -> int:
+        return int(self.tokens.shape[0])
+
+    def shared_spans(self) -> List[Span]:
+        return [s for s in self.spans if s.kind == SHARED]
+
+    def fresh_mask(self, cached_sids: Optional[set] = None) -> np.ndarray:
+        """Bool [S]: True where the token must be computed fresh (private,
+        task, separators, and shared segments absent from ``cached_sids``)."""
+        mask = np.ones(self.length, bool)
+        for s in self.spans:
+            if s.kind == SHARED and (cached_sids is None or s.sid in cached_sids):
+                mask[s.start : s.end] = False
+        return mask
+
+
+def build_prompt(segments: Sequence[Segment],
+                 sep_id: Optional[int]) -> PromptLayout:
+    """Assemble a prompt with ``<TTSEP>`` separators between blocks.
+
+    ``sep_id=None`` omits physical separators — used with block-aligned
+    segments (see :func:`aligned_segment`) where the 32-token block
+    boundary itself marks the segment boundary. This is the TPU
+    tile-aligned variant of the paper's interface: the runtime still gets
+    the block structure (through the spans), but every segment occupies
+    whole KV blocks so Mirror diffs stay block-sparse.
+    """
+    toks: List[int] = []
+    spans: List[Span] = []
+    for i, seg in enumerate(segments):
+        if i and sep_id is not None:
+            toks.append(sep_id)
+        start = len(toks)
+        toks.extend(int(t) for t in seg.tokens)
+        spans.append(Span(start, len(toks), seg.kind, seg.sid))
+    return PromptLayout(np.asarray(toks, np.int32), spans)
+
+
+def aligned_segment(tokens: Sequence[int], kind: str, block_tokens: int,
+                    pad_id: int) -> Segment:
+    """A segment padded to a whole number of KV blocks. The pad tokens are
+    part of the segment content (hashed with it), so content identity and
+    dedup still hold."""
+    toks = [int(t) for t in tokens]
+    pad = (-len(toks)) % block_tokens
+    toks.extend([pad_id] * pad)
+    return Segment(tuple(toks), kind)
+
+
+def split_prompt(tokens: Sequence[int], sep_id: int) -> List[Tuple[int, int]]:
+    """Split a flat token stream at separator boundaries.
+
+    Returns [(start, end)] spans of the segments between separators. This is
+    the runtime-side inverse of :func:`build_prompt` for applications that
+    submit raw token streams with embedded separators.
+    """
+    toks = np.asarray(tokens)
+    cuts = np.flatnonzero(toks == sep_id)
+    spans, prev = [], 0
+    for c in cuts:
+        if c > prev:
+            spans.append((prev, int(c)))
+        prev = int(c) + 1
+    if prev < len(toks):
+        spans.append((prev, len(toks)))
+    return spans
+
+
+@dataclass
+class SegmentCacheEntry:
+    """Cached KV for one content segment.
+
+    k/v are [L, S_seg, KV, hd] arrays; ``src_pos`` records the absolute
+    positions the values were computed at (needed for RoPE realignment).
+    """
+
+    sid: str
+    k: object           # jax array [L, S, KV, hd]
+    v: object
+    src_pos: np.ndarray  # int32 [S]
+    producer: str = ""
+    round_idx: int = -1
+
+    def nbytes(self) -> int:
+        return int(np.prod(self.k.shape)) * self.k.dtype.itemsize * 2
+
+
+class SegmentIndex:
+    """Segment-based hash table replacing fixed-size chunk hashing.
+
+    Two requests containing the same shared update map it to the same cache
+    object regardless of its absolute position in either prompt.
+    """
+
+    def __init__(self) -> None:
+        self._entries: Dict[str, SegmentCacheEntry] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def put(self, entry: SegmentCacheEntry) -> None:
+        self._entries[entry.sid] = entry
+
+    def get(self, sid: str) -> Optional[SegmentCacheEntry]:
+        e = self._entries.get(sid)
+        if e is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return e
+
+    def __contains__(self, sid: str) -> bool:
+        return sid in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def nbytes(self) -> int:
+        return sum(e.nbytes() for e in self._entries.values())
+
+    def evict(self, sid: str) -> None:
+        self._entries.pop(sid, None)
+
+    def clear(self) -> None:
+        self._entries.clear()

@@ -1,0 +1,51 @@
+"""Block-sparse diff extraction — Pallas TPU kernel (paper §4.3).
+
+Computes the per-32-token-block max |mirror - master| over all layers and
+the K/V planes, the quantity Diff-Aware Storage thresholds to decide which
+blocks a Mirror must carry. Grid over (layer, block); the reduction across
+layers happens via output revisiting (same output cell for every layer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(m_ref, x_ref, o_ref):
+    l = pl.program_id(1)  # layer is the INNER grid dim so the output cell
+    # is revisited on consecutive iterations (legal accumulation pattern)
+    d = jnp.abs(x_ref[0, 0].astype(jnp.float32) - m_ref[0, 0].astype(jnp.float32))
+    cur = jnp.max(d)
+
+    @pl.when(l == 0)
+    def _init():
+        o_ref[0, 0] = cur
+
+    @pl.when(l > 0)
+    def _acc():
+        o_ref[0, 0] = jnp.maximum(o_ref[0, 0], cur)
+
+
+def block_diff_kernel(
+    master: jax.Array,   # [L, S, KV, hd], S a multiple of bt
+    mirror: jax.Array,
+    bt: int = 32,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns [nb] float32 max-abs diff per token block."""
+    L, S, KV, hd = master.shape
+    nb = S // bt
+    mb = master.reshape(L, nb, bt, KV, hd)
+    xb = mirror.reshape(L, nb, bt, KV, hd)
+    spec = pl.BlockSpec((1, 1, bt, KV, hd), lambda b, l: (l, b, 0, 0, 0))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(nb, L),
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((1, 1), lambda b, l: (0, b)),
+        out_shape=jax.ShapeDtypeStruct((1, nb), jnp.float32),
+        interpret=interpret,
+    )(mb, xb)
+    return out[0]

@@ -1,0 +1,108 @@
+"""Fused diff restore — Pallas TPU kernel for Algorithm 1 (paper §4.4).
+
+For each (layer, block) grid cell the kernel:
+  1. loads the Master's 32-token KV block HBM->VMEM,
+  2. selects the Mirror's block-sparse correction if this block carries a
+     diff (whole-tile ``where``; skip-or-correct at block granularity is
+     free on the VPU, matching Fig. 9's dispatch),
+  3. applies the RoPE position recovery to the K plane, and
+  4. writes the result through the slot map into the paged KV pool.
+
+The ping-pong double-buffering of the CUDA prototype is played by the
+Pallas grid pipeline itself: while cell i is being corrected in VMEM the
+next Master block is already streaming in. Scalar-prefetched index maps
+(``diff_slot``, ``slot_map``) give the paged-gather/scatter pattern.
+
+Logical block layout: [block_tokens=32, KV, head_dim] with KV*head_dim a
+multiple of 128 for the production configs, so one logical block is a
+whole number of (8, 128) VMEM tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rope_delta(k: jax.Array, delta: jax.Array, theta: float) -> jax.Array:
+    """Rotate keys [bt, KV, hd] by per-token position delta [bt]."""
+    bt, KV, hd = k.shape
+    half = hd // 2
+    exps = jax.lax.broadcasted_iota(jnp.float32, (1, half), 1) / half
+    freqs = jnp.exp(-exps * jnp.log(theta))              # [1, half]
+    ang = delta.astype(jnp.float32)[:, None] * freqs     # [bt, half]
+    cos = jnp.cos(ang)[:, None, :]
+    sin = jnp.sin(ang)[:, None, :]
+    kf = k.astype(jnp.float32)
+    k1, k2 = kf[..., :half], kf[..., half:]
+    return jnp.concatenate([k1 * cos - k2 * sin, k2 * cos + k1 * sin],
+                           axis=-1).astype(k.dtype)
+
+
+def _kernel(diff_slot_ref, slot_map_ref,      # scalar prefetch
+            mk_ref, mv_ref, dk_ref, dv_ref, dp_ref,
+            pk_in_ref, pv_in_ref,             # aliased pool (unused reads)
+            ok_ref, ov_ref, *, theta: float):
+    del slot_map_ref, pk_in_ref, pv_in_ref
+    b = pl.program_id(1)
+    have = diff_slot_ref[b] >= 0
+
+    k = mk_ref[0, 0]        # [bt, KV, hd]
+    v = mv_ref[0, 0]
+    kd = dk_ref[0, 0]
+    vd = dv_ref[0, 0]
+    # skip-or-correct per block: whole-tile select in VMEM
+    k = jnp.where(have, kd, k)
+    v = jnp.where(have, vd, v)
+    # RoPE position recovery (Alg. 1 line 9)
+    k = _rope_delta(k, dp_ref[0], theta)
+    ok_ref[0, 0] = k
+    ov_ref[0, 0] = v
+
+
+def fused_diff_restore_kernel(
+    master_k: jax.Array,   # [L, nb, bt, KV, hd]
+    master_v: jax.Array,
+    diff_k: jax.Array,     # [L, ndb, bt, KV, hd] (ndb >= 1, padded)
+    diff_v: jax.Array,
+    diff_slot: jax.Array,  # [nb] int32, row into diff_* or -1
+    slot_map: jax.Array,   # [nb] int32, destination page per block
+    delta_pos: jax.Array,  # [nb, bt] int32 position delta for RoPE recovery
+    theta: float,
+    pool_k: jax.Array,     # [L, n_pages, bt, KV, hd] (updated in place)
+    pool_v: jax.Array,
+    *,
+    interpret: bool = False,
+):
+    L, nb, bt, KV, hd = master_k.shape
+
+    grid = (L, nb)
+    spec_master = pl.BlockSpec(
+        (1, 1, bt, KV, hd), lambda l, b, ds, sm: (l, b, 0, 0, 0))
+    spec_diff = pl.BlockSpec(
+        (1, 1, bt, KV, hd),
+        lambda l, b, ds, sm: (l, jnp.maximum(ds[b], 0), 0, 0, 0))
+    spec_dp = pl.BlockSpec((1, bt), lambda l, b, ds, sm: (b, 0))
+    spec_out = pl.BlockSpec(
+        (1, 1, bt, KV, hd), lambda l, b, ds, sm: (l, sm[b], 0, 0, 0))
+
+    gridspec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[spec_master, spec_master, spec_diff, spec_diff, spec_dp,
+                  spec_out, spec_out],
+        out_specs=[spec_out, spec_out],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel, theta=theta),
+        grid_spec=gridspec,
+        out_shape=[jax.ShapeDtypeStruct(pool_k.shape, pool_k.dtype),
+                   jax.ShapeDtypeStruct(pool_v.shape, pool_v.dtype)],
+        input_output_aliases={7: 0, 8: 1},  # pools are updated in place
+        interpret=interpret,
+    )
+    return fn(diff_slot, slot_map, master_k, master_v, diff_k, diff_v,
+              delta_pos, pool_k, pool_v)

@@ -1,0 +1,113 @@
+"""Causal / sliding-window flash attention prefill — Pallas TPU kernel.
+
+The perf-critical compute layer of prefill (the phase TokenDance's
+collective reuse accelerates). Online-softmax over KV tiles with VMEM
+scratch for the running (max, sum, accumulator); GQA is handled by mapping
+each query head to its KV head in the BlockSpec index map, so no repeated
+K/V materialization. Block shapes are MXU-aligned (q/k tiles x head_dim).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, bq, bk, nk):
+    i, j = pl.program_id(1), pl.program_id(2)
+    row0 = i * bq
+    col0 = j * bk
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = jnp.asarray(True)
+    if causal:
+        run = run & (col0 <= row0 + bq - 1)
+    if window:
+        run = run & (col0 + bk - 1 >= row0 - window + 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)                    # [bk, hd]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)             # [bq, bk]
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= cols <= rows
+        if window:
+            mask &= (rows - cols) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]                               # [bq, 1]
+        l_prev = l_scr[:, :1]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        m_scr[...] = jnp.broadcast_to(m_cur, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+        acc_scr[...] = acc
+        o_ref[0] = (acc / jnp.maximum(l_new, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_prefill_kernel(
+    q: jax.Array,        # [H, S, hd]
+    k: jax.Array,        # [KV, S, hd]
+    v: jax.Array,        # [KV, S, hd]
+    *,
+    causal: bool = True,
+    window: int = 0,     # 0 = unbounded
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    H, S, hd = q.shape
+    KV = k.shape[0]
+    G = H // KV
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, "pad S to the attention tile"
+    nq, nk = S // bq, S // bk
+    scale = scale if scale is not None else hd ** -0.5
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j: (h // G, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j: (h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

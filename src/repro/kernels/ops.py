@@ -1,0 +1,80 @@
+"""Jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True``; on a
+TPU backend they compile to Mosaic. ``use_kernel=False`` dispatches to the
+pure-jnp oracle in :mod:`repro.kernels.ref` — the serving engine uses the
+oracle path on CPU for speed, while tests sweep the kernels against it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.block_diff import block_diff_kernel
+from repro.kernels.diff_restore import fused_diff_restore_kernel
+from repro.kernels.flash_prefill import flash_prefill_kernel
+from repro.kernels.rope_align import rope_align_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("theta", "use_kernel"))
+def rope_align(k, src_pos, tgt_pos, theta: float, use_kernel: bool = True):
+    """Re-rotate cached keys [S, KV, hd] from src to tgt positions."""
+    if not use_kernel:
+        return ref.rope_align_ref(k, src_pos, tgt_pos, theta)
+    return rope_align_kernel(k, src_pos, tgt_pos, theta,
+                             interpret=_interpret())
+
+
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("bt", "use_kernel"))
+def block_diff(master, mirror, bt: int = 32, use_kernel: bool = True):
+    """Per-block max-abs difference [nb] between two [L, S, KV, hd] caches."""
+    if not use_kernel:
+        return ref.block_diff_ref(master, mirror, bt)
+    return block_diff_kernel(master, mirror, bt, interpret=_interpret())
+
+
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "use_kernel"))
+def flash_prefill(q, k, v, *, causal: bool = True, window: int = 0,
+                  block_q: int = 128, block_k: int = 128,
+                  use_kernel: bool = True):
+    """Flash attention over [H, S, hd] q and [KV, S, hd] k/v."""
+    if not use_kernel:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return flash_prefill_kernel(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_interpret())
+
+
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("theta", "use_kernel"))
+def fused_diff_restore(master_k, master_v, diff_k, diff_v, diff_slot,
+                       slot_map, delta_pos, theta: float,
+                       pool_k, pool_v, use_kernel: bool = True):
+    """Algorithm 1: block-sparse diff apply + RoPE recovery + paged write.
+
+    master_k/v: [L, nb, bt, KV, hd]; diff_k/v: [L, ndb, bt, KV, hd];
+    diff_slot/slot_map: [nb] int32; delta_pos: [nb, bt] int32;
+    pools: [L, n_pages, bt, KV, hd]. Returns updated pools.
+    """
+    if diff_k.shape[1] == 0:  # keep index maps total: pad one zero row
+        zshape = (diff_k.shape[0], 1) + diff_k.shape[2:]
+        diff_k = jnp.zeros(zshape, diff_k.dtype)
+        diff_v = jnp.zeros(zshape, diff_v.dtype)
+    if not use_kernel:
+        return ref.fused_diff_restore_ref(
+            master_k, master_v, diff_k, diff_v, diff_slot, slot_map,
+            delta_pos, theta, pool_k, pool_v)
+    return fused_diff_restore_kernel(
+        master_k, master_v, diff_k, diff_v, diff_slot, slot_map,
+        delta_pos, theta, pool_k, pool_v, interpret=_interpret())

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract the
+kernels are swept against in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_delta_ref(k: jax.Array, delta: jax.Array, theta: float) -> jax.Array:
+    """Rotate keys [..., S, KV, hd] by per-token position delta [..., S]."""
+    hd = k.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = delta.astype(jnp.float32)[..., None] * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    kf = k.astype(jnp.float32)
+    k1, k2 = kf[..., :half], kf[..., half:]
+    out = jnp.concatenate([k1 * cos - k2 * sin, k2 * cos + k1 * sin], axis=-1)
+    return out.astype(k.dtype)
+
+
+def fused_diff_restore_ref(master_k, master_v, diff_k, diff_v, diff_slot,
+                           slot_map, delta_pos, theta, pool_k, pool_v):
+    """Oracle for kernels.diff_restore: block select + RoPE + paged write.
+
+    master_k/v: [L, nb, bt, KV, hd]; diff_k/v: [L, ndb, bt, KV, hd];
+    diff_slot: [nb] (-1 = no diff); slot_map: [nb] dest pages;
+    delta_pos: [nb, bt]; pools: [L, n_pages, bt, KV, hd].
+    """
+    L, nb, bt, KV, hd = master_k.shape
+    have = (diff_slot >= 0)[None, :, None, None, None]
+    rows = jnp.maximum(diff_slot, 0)
+    k = jnp.where(have, diff_k[:, rows], master_k)
+    v = jnp.where(have, diff_v[:, rows], master_v)
+    # RoPE recovery per block
+    k = rope_delta_ref(
+        k.reshape(L, nb * bt, KV, hd),
+        jnp.broadcast_to(delta_pos.reshape(1, nb * bt), (L, nb * bt)),
+        theta).reshape(L, nb, bt, KV, hd)
+    pool_k = pool_k.at[:, slot_map].set(k)
+    pool_v = pool_v.at[:, slot_map].set(v)
+    return pool_k, pool_v
+
+
+def rope_align_ref(k: jax.Array, src_pos: jax.Array, tgt_pos: jax.Array,
+                   theta: float) -> jax.Array:
+    """Oracle for kernels.rope_align: k [S, KV, hd], positions [S]."""
+    return rope_delta_ref(k, tgt_pos - src_pos, theta)
+
+
+def block_diff_ref(master: jax.Array, mirror: jax.Array, bt: int) -> jax.Array:
+    """Oracle for kernels.block_diff: per-block max |mirror - master|.
+
+    master/mirror: [L, S, KV, hd] with S a multiple of bt; returns [nb] f32.
+    """
+    L, S, KV, hd = master.shape
+    nb = S // bt
+    d = jnp.abs(mirror.astype(jnp.float32) - master.astype(jnp.float32))
+    return d.reshape(L, nb, bt, KV, hd).max(axis=(0, 2, 3, 4))
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """Oracle for kernels.flash_prefill.
+
+    q: [H, Sq, hd]; k/v: [KV, Sk, hd] (GQA: H a multiple of KV).
+    window: 0 = unbounded; else attend iff 0 <= i - j < window.
+    """
+    H, Sq, hd = q.shape
+    KV, Sk, _ = k.shape
+    G = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(KV, G, Sq, hd).astype(jnp.float32)
+    logits = jnp.einsum("kgqh,ksh->kgqs", qg, k.astype(jnp.float32)) * scale
+    i = jnp.arange(Sq)[:, None]
+    j = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= j <= i
+    if window:
+        mask &= (i - j) < window
+    logits = jnp.where(mask, logits, -2.0 ** 30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("kgqs,ksh->kgqh", p, v.astype(jnp.float32))
+    return out.reshape(H, Sq, hd).astype(v.dtype)

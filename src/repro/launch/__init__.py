@@ -1,0 +1,8 @@
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_debug_mesh, make_production_mesh
+from repro.launch.sharding import ShardingRules, rules_for
+
+__all__ = [
+    "HBM_BW", "ICI_BW", "PEAK_FLOPS_BF16",
+    "make_debug_mesh", "make_production_mesh",
+    "ShardingRules", "rules_for",
+]

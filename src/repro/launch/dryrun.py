@@ -1,0 +1,340 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (architecture x input
+shape x mesh) combination on the production mesh and extract the roofline
+terms from the compiled artifact (no tensor is ever allocated — all inputs
+are ShapeDtypeStructs).
+
+The two lines above MUST precede every other import: jax locks the device
+count on first initialization, and the 512 placeholder host devices stand
+in for the 2-pod x 256-chip TPU v5e target. Never set this flag globally —
+smoke tests and benchmarks must see the single real CPU device.
+
+Two probes per combination:
+  A. memory probe — full depth, layer-scan + remat: proves the combination
+     lowers/compiles on the mesh and yields memory_analysis() (fits HBM?).
+  B. cost probe — XLA's cost_analysis costs while-loop bodies and
+     checkpoint calls ONCE, so per-layer FLOPs/bytes/collective-bytes are
+     measured exactly by compiling the arch UNROLLED (no remat) at 2 and 4
+     layers and extrapolating linearly (layers are homogeneous):
+         F(L) = F(2) + (L-2)/2 * (F(4) - F(2)).
+     Train-step numbers are therefore no-remat; remat adds ~= one extra
+     forward (noted in EXPERIMENTS.md).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun [--mesh single|multi|both]
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json (resumable;
+--force re-runs).
+"""
+import argparse
+import dataclasses
+import gc
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    get_config,
+    list_archs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import build_report
+from repro.launch.sharding import ShardingRules, rules_for
+from repro.models import decode_step, init_params, make_empty_cache, prefill
+from repro.training.optimizer import AdamWConfig, init_adamw
+from repro.training.train_loop import loss_fn, make_train_step
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "../../../experiments/dryrun")
+FRONTEND_FRAMES = 256   # stubbed modality frontends emit this many embeddings
+
+ASSIGNED_ARCHS = [a for a in list_archs() if not a.startswith("qwen2.5")]
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, rules: ShardingRules):
+    """ShapeDtypeStruct stand-ins + shardings for every model input."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    sds = jax.ShapeDtypeStruct
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = rules.params_shardings(params)
+    out = {"params": (params, p_sh)}
+
+    if shape.kind == "train":
+        opt = jax.eval_shape(lambda: init_adamw(params))
+        out["opt"] = (opt, rules.opt_shardings(opt, p_sh))
+        out["tokens"] = (sds((B, S), jnp.int32), rules.tokens_sharding())
+        out["mask"] = (sds((B, S), jnp.float32), rules.tokens_sharding())
+    elif shape.kind == "prefill":
+        out["tokens"] = (sds((B, S), jnp.int32), rules.tokens_sharding())
+    else:  # decode: ONE new token against a cache of seq_len
+        cache = jax.eval_shape(lambda: make_empty_cache(cfg, B, S))
+        out["cache"] = (cache, rules.cache_shardings(cache))
+        out["token"] = (sds((B,), jnp.int32), rules.token_sharding_1d())
+    if cfg.frontend != "none" and shape.kind in ("train", "prefill"):
+        out["frontend_embeds"] = (
+            sds((B, FRONTEND_FRAMES, cfg.d_model), dt),
+            rules.ns(rules.batch_axes, None, None))
+    return out
+
+
+def build_lowered(cfg: ModelConfig, shape: InputShape, rules: ShardingRules,
+                  *, unroll: bool, remat: bool):
+    """jit + lower the right step function for this input shape."""
+    specs = input_specs(cfg, shape, rules)
+    long_ctx = shape.name == "long_500k"
+    p_sds, p_sh = specs["params"]
+
+    if shape.kind == "train":
+        o_sds, o_sh = specs["opt"]
+        t_sds, t_sh = specs["tokens"]
+        m_sds, m_sh = specs["mask"]
+        fe = specs.get("frontend_embeds")
+
+        def step(params, opt, tokens, mask, *fe_args):
+            from repro.training.optimizer import adamw_update
+            (loss, parts), grads = jax.value_and_grad(
+                lambda p: loss_fn(
+                    p, cfg, tokens, mask, shard=rules.shard, remat=remat,
+                    unroll=unroll,
+                    frontend_embeds=fe_args[0] if fe_args else None),
+                has_aux=True)(params)
+            params, opt, om = adamw_update(AdamWConfig(), params, grads, opt)
+            return params, opt, {"loss": loss, **parts, **om}
+
+        in_sh = [p_sh, o_sh, t_sh, m_sh]
+        in_sds = [p_sds, o_sds, t_sds, m_sds]
+        if fe is not None:
+            in_sh.append(fe[1])
+            in_sds.append(fe[0])
+        fn = jax.jit(step, in_shardings=tuple(in_sh),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+        return fn.lower(*in_sds)
+
+    if shape.kind == "prefill":
+        t_sds, t_sh = specs["tokens"]
+        cache_sh = rules.cache_shardings(
+            jax.eval_shape(lambda: make_empty_cache(
+                cfg, shape.global_batch, shape.seq_len)))
+        fe = specs.get("frontend_embeds")
+
+        def pf(params, tokens, *fe_args):
+            return prefill(params, cfg, tokens, max_len=shape.seq_len,
+                           shard=rules.shard, long_context=long_ctx,
+                           logits_last_only=True, unroll=unroll,
+                           frontend_embeds=fe_args[0] if fe_args else None)
+
+        in_sh = [p_sh, t_sh]
+        in_sds = [p_sds, t_sds]
+        if fe is not None:
+            in_sh.append(fe[1])
+            in_sds.append(fe[0])
+        fn = jax.jit(pf, in_shardings=tuple(in_sh),
+                     out_shardings=(None, cache_sh))
+        return fn.lower(*in_sds)
+
+    # decode / serve_step
+    c_sds, c_sh = specs["cache"]
+    tok_sds, tok_sh = specs["token"]
+
+    def serve_step(params, token, cache):
+        return decode_step(params, cfg, token, cache, shard=rules.shard,
+                           long_context=long_ctx, unroll=unroll)
+    fn = jax.jit(serve_step, in_shardings=(p_sh, tok_sh, c_sh),
+                 out_shardings=(None, c_sh), donate_argnums=(2,))
+    return fn.lower(p_sds, tok_sds, c_sds)
+
+
+def _cost_probe_layers(cfg: ModelConfig):
+    """Layer counts for the linear cost extrapolation (respecting any
+    layer-pattern period, e.g. gemma3's 6-layer local:global cycle)."""
+    if cfg.global_layer_interval:
+        p = cfg.global_layer_interval
+        return p, 2 * p
+    return 2, 4
+
+
+def _compile(cfg, shape, mesh, *, unroll, remat, rule_overrides=None):
+    rules = rules_for(cfg, shape, mesh, **(rule_overrides or {}))
+    with mesh:
+        lowered = build_lowered(cfg, shape, rules, unroll=unroll, remat=remat)
+        compiled = lowered.compile()
+        cost = dict(compiled.cost_analysis())
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+    del lowered, compiled
+    gc.collect()
+    return cost, mem, hlo
+
+
+# perf variants (EXPERIMENTS.md §Perf): config/sharding overrides applied on
+# top of the paper-faithful baseline; results saved under a __<variant>
+# suffix. "cfg" entries go through ModelConfig.replace, "rules" through
+# rules_for(**overrides).
+VARIANTS = {
+    "baseline": {},
+    # flash-style online-softmax attention: kills the O(S^2) logits buffer
+    "chunked_attn": {"cfg": {"attn_impl": "chunked", "attn_chunk": 1024}},
+    # + chunked cross-entropy: never materializes [B, S, V] logits
+    "chunked_all": {"cfg": {"attn_impl": "chunked", "attn_chunk": 1024,
+                            "xent_chunk": 512}},
+    # decode: sequence-shard the KV cache over data and keep weights 2D-
+    # stationary, so collectives move activations (KBs) not weights (GBs)
+    "decode_seqshard": {"rules": {"batch_axes": (), "seq_shard": True}},
+    # combination used for the final optimized decode numbers
+    "decode_seqshard_chunked": {
+        "cfg": {"attn_impl": "chunked", "attn_chunk": 2048},
+        "rules": {"batch_axes": (), "seq_shard": True}},
+    # sequence parallelism: residual stream sharded over `model` between
+    # layers -> all-reduce becomes reduce-scatter + all-gather and the
+    # per-device activation bytes drop by the model-axis size
+    "seqpar_chunked": {
+        "cfg": {"attn_impl": "chunked", "attn_chunk": 1024},
+        "rules": {"seq_parallel": True}},
+    "seqpar_chunked_all": {
+        "cfg": {"attn_impl": "chunked", "attn_chunk": 1024,
+                "xent_chunk": 512},
+        "rules": {"seq_parallel": True}},
+}
+
+
+def run_combo(arch: str, shape_name: str, multi_pod: bool,
+              force: bool = False, save: bool = True,
+              cost_probe: bool = True, variant: str = "baseline") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    out_path = os.path.join(
+        RESULTS_DIR, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    if save and not force and os.path.exists(out_path):
+        with open(out_path) as f:
+            rec = json.load(f)
+            if rec.get("status") == "ok":
+                return rec
+
+    vspec = VARIANTS[variant]
+    cfg = get_config(arch).replace(**vspec.get("cfg", {}))
+    shape = INPUT_SHAPES[shape_name]
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "variant": variant, "status": "error"}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = mesh.size
+        rule_overrides = vspec.get("rules", {})
+
+        # ---- probe A: full-depth memory/compile proof -------------------
+        remat = shape.kind == "train"
+        _, mem, hlo_a = _compile(cfg, shape, mesh, unroll=False, remat=remat,
+                                 rule_overrides=rule_overrides)
+        t_a = time.time() - t0
+        record["memory_analysis"] = {
+            "argument": mem.argument_size_in_bytes,
+            "output": mem.output_size_in_bytes,
+            "temp": mem.temp_size_in_bytes,
+            "alias": mem.alias_size_in_bytes,
+        }
+        record["peak_device_bytes"] = (
+            mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+
+        # ---- probe B: exact per-layer cost, linearly extrapolated -------
+        if cost_probe:
+            l_lo, l_hi = _cost_probe_layers(cfg)
+            costs, hlos = [], []
+            for lprobe in (l_lo, l_hi):
+                c, _, h = _compile(cfg.replace(n_layers=lprobe), shape, mesh,
+                                   unroll=True, remat=False,
+                                   rule_overrides=rule_overrides)
+                costs.append(c)
+                hlos.append(h)
+            from repro.launch.roofline import collective_bytes
+            scale = (cfg.n_layers - l_lo) / (l_hi - l_lo)
+
+            def extrap(lo: float, hi: float) -> float:
+                return lo + scale * (hi - lo)
+
+            cost = {
+                "flops": extrap(costs[0].get("flops", 0.0),
+                                costs[1].get("flops", 0.0)),
+                "bytes accessed": extrap(
+                    costs[0].get("bytes accessed", 0.0),
+                    costs[1].get("bytes accessed", 0.0)),
+            }
+            cb = [collective_bytes(h) for h in hlos]
+            coll = {k: extrap(cb[0][k], cb[1][k]) for k in cb[0]}
+            rep = build_report(cfg, shape, mesh_name, n_chips, cost, "",
+                               mem, notes="cost probe: unrolled no-remat, "
+                               f"extrapolated from L={l_lo},{l_hi}")
+            rep.coll_breakdown = {k: int(v) for k, v in coll.items()}
+            rep.coll_bytes = float(sum(coll.values()))
+            from repro.launch.mesh import ICI_BW
+            rep.t_collective = rep.coll_bytes / ICI_BW
+            terms = {"compute": rep.t_compute, "memory": rep.t_memory,
+                     "collective": rep.t_collective}
+            rep.bottleneck = max(terms, key=terms.get)
+            record.update(dataclasses.asdict(rep))
+        record.update({"status": "ok", "t_probe_a_s": round(t_a, 1),
+                       "t_total_s": round(time.time() - t0, 1)})
+    except Exception as e:  # recorded, surfaced, fixed — not swallowed
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    if save:
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-cost-probe", action="store_true",
+                    help="compile proof + memory analysis only")
+    ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED_ARCHS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                # roofline table is single-pod; multi-pod proves the pod axis
+                rec = run_combo(arch, shape, mp, force=args.force,
+                                cost_probe=not mp and not args.no_cost_probe,
+                                variant=args.variant)
+                tag = f"{arch:16s} {shape:12s} {'2x16x16' if mp else '16x16 '}"
+                if rec["status"] == "ok":
+                    extra = ""
+                    if "hlo_flops" in rec:
+                        extra = (f" flops/dev={rec['hlo_flops']:.3e}"
+                                 f" coll={rec['coll_bytes']:.3e}B"
+                                 f" bn={rec['bottleneck']}")
+                    print(f"OK   {tag} peak/dev="
+                          f"{rec['peak_device_bytes']/2**30:.2f}GiB"
+                          f"{extra} t={rec['t_total_s']}s", flush=True)
+                else:
+                    failures += 1
+                    err = rec["error"].splitlines()[0][:160]
+                    print(f"FAIL {tag} {err}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} combos failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), all in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / link_bw
+
+``cost_analysis()`` on the SPMD-partitioned module reports PER-DEVICE
+flops/bytes (verified against a known matmul). collective_bytes is parsed
+from the compiled HLO text: the result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g.:  %all-reduce.5 = f32[16,1024]{1,0} all-reduce(
+_INSTR_RE = re.compile(
+    r"=\s*\(?([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+(" + "|".join(_COLLECTIVES) + r")\(")
+# tuple-result collectives: (f32[8,4]{1,0}, f32[8,4]{1,0}) all-to-all(
+_ONE_SHAPE = r"[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?"
+_TUPLE_RE = re.compile(
+    r"=\s*\((" + _ONE_SHAPE + r"(?:,\s*" + _ONE_SHAPE + r")*)\)\s+("
+    + "|".join(_COLLECTIVES) + r")\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes summed over the module."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] += _shape_bytes(dtype, dims)
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            shapes, kind = m.groups()
+            for dt, dims in _SHAPE_RE.findall(shapes):
+                out[kind] += _shape_bytes(dt, dims)
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    # raw per-device numbers
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    # terms (seconds)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    # usefulness
+    model_flops: float           # 6ND (train) / 2ND (prefill) / 2·N_act·B (decode)
+    useful_ratio: float          # model_flops / (hlo_flops * chips)
+    # memory_analysis
+    argument_bytes: int = 0
+    output_bytes: int = 0
+    temp_bytes: int = 0
+    notes: str = ""
+
+    def dominant(self) -> str:
+        return self.bottleneck
+
+
+def model_flops_for(cfg: ModelConfig, shape: InputShape) -> float:
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: ONE token per sequence + attention over the cache
+    flops = 2.0 * n_active * shape.global_batch
+    if cfg.has_attention:
+        kv = cfg.n_kv_heads * cfg.resolved_head_dim
+        ctx = shape.seq_len
+        if shape.name == "long_500k" and cfg.long_context_window:
+            ctx = min(ctx, cfg.long_context_window)
+        flops += (2.0 * shape.global_batch * cfg.n_layers
+                  * cfg.n_heads * cfg.resolved_head_dim * 2 * ctx)
+    return flops
+
+
+def build_report(
+    cfg: ModelConfig,
+    shape: InputShape,
+    mesh_name: str,
+    n_chips: int,
+    cost: dict,
+    hlo_text: str,
+    mem=None,
+    notes: str = "",
+) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    cbytes = float(sum(coll.values()))
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = byts / HBM_BW
+    t_x = cbytes / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    mf = model_flops_for(cfg, shape)
+    return RooflineReport(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, n_chips=n_chips,
+        hlo_flops=flops, hlo_bytes=byts, coll_bytes=cbytes,
+        coll_breakdown=coll,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=max(terms, key=terms.get),
+        model_flops=mf,
+        useful_ratio=mf / (flops * n_chips) if flops else 0.0,
+        argument_bytes=getattr(mem, "argument_size_in_bytes", 0),
+        output_bytes=getattr(mem, "output_size_in_bytes", 0),
+        temp_bytes=getattr(mem, "temp_size_in_bytes", 0),
+        notes=notes,
+    )

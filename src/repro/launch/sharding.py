@@ -1,0 +1,207 @@
+"""Sharding rules: parameters, optimizer state, activations and caches for
+every (architecture x input shape x mesh) combination.
+
+Strategy (see DESIGN.md §7):
+  * weights: tensor-parallel over ``model`` (heads / d_ff / experts /
+    vocab) + FSDP over ``data`` on the other large dim (ZeRO-3 style) —
+    required for the >=70B archs to fit v5e HBM; uniform elsewhere.
+  * batch: sharded over (pod, data) for train / prefill / decode.
+  * long_500k (batch=1): the KV cache is sequence-sharded over ``data``
+    (and ``model``) instead; GSPMD inserts the partial-softmax collectives.
+  * MoE: expert-parallel over ``model`` when n_experts divides the axis,
+    tensor-parallel within experts otherwise (grok's 8 experts on a
+    16-way axis).
+Activations are annotated through the ``shard`` callable threaded into
+the model code (tags -> PartitionSpec).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+@dataclass
+class ShardingRules:
+    mesh: Mesh
+    cfg: ModelConfig
+    batch_axes: Tuple[str, ...]          # axes sharding the batch dim
+    fsdp_axis: Optional[str] = "data"    # weight-sharding data axis (ZeRO-3)
+    seq_shard: bool = False              # long-context: shard cache seq dim
+    seq_parallel: bool = False           # train: shard activation seq dim
+    expert_parallel: bool = field(init=False)
+    model_size: int = field(init=False)
+
+    def __post_init__(self):
+        self.model_size = self.mesh.shape["model"]
+        self.expert_parallel = (
+            self.cfg.is_moe and self.cfg.n_experts % self.model_size == 0)
+
+    # ------------------------------------------------------------- helpers
+    def ns(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))
+
+    def _axis_size(self, entry) -> int:
+        if entry is None:
+            return 1
+        if isinstance(entry, (tuple, list)):
+            n = 1
+            for e in entry:
+                n *= self.mesh.shape[e]
+            return n
+        return self.mesh.shape[entry]
+
+    def sanitize(self, spec, shape) -> P:
+        """Drop sharding on dims the global shape cannot divide (e.g. a
+        32001-entry vocab or 25 attention heads on a 16-way axis)."""
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        out = []
+        for d, entry in enumerate(entries):
+            div = self._axis_size(entry)
+            out.append(entry if div > 1 and shape[d] % div == 0 else
+                       (entry if div == 1 else None))
+        return P(*out)
+
+    def ns_for(self, shape, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, self.sanitize(P(*spec), shape))
+
+    # ------------------------------------------------------ activation tags
+    def shard(self, x: jax.Array, tag: str) -> jax.Array:
+        spec = self.act_spec(tag, x.ndim)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, self.ns_for(x.shape, *spec))
+
+    def act_spec(self, tag: str, ndim: int):
+        b = self.batch_axes
+        sp = "model" if self.seq_parallel else None
+        if tag == "act_resid":        # [B, S, D]
+            return (b, sp, None)
+        if tag == "act_heads":        # [B, S, H, hd]
+            return (b, None, "model", None)
+        if tag == "act_kv_heads":     # [B, S, KV, hd] (KV may not divide)
+            return (b, None, None, None)
+        if tag == "act_ffn":          # [B, S, F]
+            return (b, None, "model")
+        if tag == "logits":           # [B, S, V]
+            return (b, None, "model")
+        if tag == "moe_dispatch":     # [G, E, C, D]
+            e = "model" if self.expert_parallel else None
+            return (b, e, None, None)
+        if tag == "moe_ffn":          # [G, E, C, F]
+            e = "model" if self.expert_parallel else None
+            f = None if self.expert_parallel else "model"
+            return (b, e, None, f)
+        if tag == "cache_kv":         # [L, B, S, KV, hd]
+            if self.seq_shard:
+                return (None, None, ("data", "model"), None, None)
+            return (None, b, "model", None, None)
+        return None
+
+    # --------------------------------------------------------- param specs
+    def param_spec(self, path: str, leaf) -> P:
+        """PartitionSpec for one parameter leaf, by its pytree path."""
+        nd = leaf.ndim
+        fsdp = self.fsdp_axis
+        m = "model"
+        if "embed" in path:                       # [V, D]
+            return P(m, fsdp)
+        if "lm_head" in path:                     # [D, V]
+            return P(fsdp, m)
+        if "final_norm" in path or "ln" in path or "norm" in path:
+            return P(*([None] * nd))
+        if "attn" in path:
+            if path.endswith("wq") or path.endswith("wk") or path.endswith("wv"):
+                return P(None, fsdp, m)           # [L, D, H*hd]
+            if path.endswith("wo"):
+                return P(None, m, fsdp)           # [L, H*hd, D]
+            if path.endswith("bq") or path.endswith("bk") or path.endswith("bv"):
+                return P(None, m)                 # [L, H*hd]
+            return P(*([None] * nd))
+        if "moe" in path:
+            if path.endswith("router"):
+                return P(None, fsdp, None)        # [L, D, E]
+            if self.expert_parallel:
+                if path.endswith("w_down"):       # [L, E, F, D]
+                    return P(None, m, None, fsdp) if nd == 4 else P(None, m, fsdp)
+                if nd == 4:                       # [L, E, D, F]
+                    return P(None, m, fsdp, None)
+            else:
+                if path.endswith("w_down"):
+                    return P(None, None, m, fsdp) if nd == 4 else P(None, m, fsdp)
+                if nd == 4:
+                    return P(None, None, fsdp, m)
+            # dense residual (arctic): [L, D, F] / [L, F, D]
+            if path.endswith("dense/w_down"):
+                return P(None, m, fsdp)
+            if nd == 3:
+                return P(None, fsdp, m)
+            return P(*([None] * nd))
+        if "mlp" in path:
+            if path.endswith("w_down"):           # [L, F, D]
+                return P(None, m, fsdp)
+            return P(None, fsdp, m)               # [L, D, F]
+        if "ssm" in path:
+            if path.endswith("in_proj"):          # [L, D, d_in_proj]
+                return P(None, fsdp, None)
+            if path.endswith("out_proj"):         # [L, d_inner, D]
+                return P(None, None, fsdp)
+            return P(*([None] * nd))
+        return P(*([None] * nd))
+
+    def params_shardings(self, params_sds) -> dict:
+        def assign(path, leaf):
+            name = "/".join(str(getattr(p, "key", p)) for p in path)
+            return self.ns_for(leaf.shape, *self.param_spec(name, leaf))
+        return jax.tree_util.tree_map_with_path(assign, params_sds)
+
+    def opt_shardings(self, opt_sds, params_shardings):
+        """AdamW moments shard like their parameters; step is replicated."""
+        from repro.training.optimizer import AdamWState
+        return AdamWState(self.ns(), params_shardings, params_shardings)
+
+    # ---------------------------------------------------------- data specs
+    def tokens_sharding(self) -> NamedSharding:
+        return self.ns(self.batch_axes, None)
+
+    def token_sharding_1d(self) -> NamedSharding:
+        return self.ns(self.batch_axes)
+
+    def cache_shardings(self, cache_sds) -> dict:
+        def assign(path, leaf):
+            name = str(getattr(path[-1], "key", path[-1]))
+            if name in ("k", "v"):
+                return self.ns_for(leaf.shape,
+                                   *self.act_spec("cache_kv", leaf.ndim))
+            if "ssm" in name:                     # [L, B, nh, hp, n]
+                return self.ns_for(leaf.shape, None, self.batch_axes,
+                                   "model", None, None)
+            if "conv" in name:                    # [L, B, 3, convdim]
+                return self.ns_for(leaf.shape, None, self.batch_axes,
+                                   None, None)
+            if "kv_pos" in name or "kv_valid" in name:  # [B, S]
+                if self.seq_shard:
+                    return self.ns_for(leaf.shape, None, ("data", "model"))
+                return self.ns_for(leaf.shape, self.batch_axes, None)
+            return self.ns_for(leaf.shape, self.batch_axes)  # length [B]
+        return jax.tree_util.tree_map_with_path(assign, cache_sds)
+
+
+def rules_for(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+              **overrides) -> ShardingRules:
+    axes = tuple(mesh.axis_names)
+    batch_axes = tuple(a for a in axes if a in ("pod", "data"))
+    kw: dict = dict(batch_axes=batch_axes)
+    if shape.name == "long_500k":
+        kw.update(batch_axes=(), seq_shard=True)
+    if shape.kind == "train":
+        kw.update(seq_parallel=False)
+    kw.update(overrides)
+    return ShardingRules(mesh, cfg, **kw)

@@ -1,0 +1,9 @@
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_params,
+    make_empty_cache,
+    prefill,
+)
+
+__all__ = ["decode_step", "forward", "init_params", "make_empty_cache", "prefill"]

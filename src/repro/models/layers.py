@@ -1,0 +1,331 @@
+"""Core neural-net layers in pure JAX (no flax): RMSNorm, RoPE, GQA
+attention (sliding window / qk-norm / bias / logit softcap), SwiGLU MLP and
+capacity-dispatched MoE.
+
+All functions are pure; parameters are plain dicts of jnp arrays. Sharding
+is injected through an optional ``shard`` callable (see launch.sharding) so
+the same code path runs on 1 CPU device and on the 512-chip mesh.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Shard = Callable[[jax.Array, str], jax.Array]
+
+
+def _noshard(x: jax.Array, _tag: str) -> jax.Array:
+    return x
+
+
+NEG_INF = -2.0 ** 30
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float):
+    """cos/sin tables for the given integer positions.
+
+    positions: int array [...]; returns (cos, sin) with shape [..., head_dim/2],
+    float32.
+    """
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate ``x`` [..., S, H, head_dim] by per-position cos/sin [..., S, hd/2].
+
+    Uses the split-halves (llama) convention.
+    """
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # cos/sin are [..., S, half]; insert the head axis.
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dt)
+
+
+def rope_shift(k: jax.Array, old_pos: jax.Array, new_pos: jax.Array,
+               theta: float) -> jax.Array:
+    """Re-rotate cached keys from ``old_pos`` to ``new_pos`` (PIC realignment).
+
+    Rotation by delta = new - old composes with the original rotation, so a
+    cached key only needs a single extra rotation to move position. k is
+    [..., S, H, hd]; positions are int [..., S].
+    """
+    cos, sin = rope_cos_sin(new_pos - old_pos, k.shape[-1], theta)
+    return apply_rope(k, cos, sin)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+def gqa_attention(
+    q: jax.Array,            # [B, Sq, H, hd] (already RoPE'd)
+    k: jax.Array,            # [B, Sk, KV, hd]
+    v: jax.Array,            # [B, Sk, KV, hd]
+    *,
+    q_pos: jax.Array,        # int [B, Sq] absolute positions of queries
+    kv_pos: jax.Array,       # int [B, Sk]
+    window: jax.Array | int, # scalar; attend iff 0 <= q_pos - kv_pos < window
+    softcap: float = 0.0,
+    kv_valid: Optional[jax.Array] = None,  # bool [B, Sk]
+) -> jax.Array:
+    """Grouped-query causal attention with a sliding window.
+
+    ``window`` == Sk (or larger) means full causal attention. Returns
+    [B, Sq, H, hd].
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    delta = q_pos[:, None, :] - kv_pos[:, :, None]  # [B, Sk, Sq] (kv, q)
+    delta = jnp.swapaxes(delta, 1, 2)               # [B, Sq, Sk]
+    allowed = (delta >= 0) & (delta < window)
+    if kv_valid is not None:
+        allowed = allowed & kv_valid[:, None, :]
+    logits = jnp.where(allowed[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(v.dtype)
+
+
+def gqa_attention_chunked(
+    q: jax.Array,            # [B, Sq, H, hd] (already RoPE'd)
+    k: jax.Array,            # [B, Sk, KV, hd]
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    window: jax.Array | int,
+    softcap: float = 0.0,
+    kv_valid: Optional[jax.Array] = None,
+    chunk: int = 512,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks (flash-attention dataflow in
+    pure XLA): peak logits memory O(Sq*chunk) instead of O(Sq*Sk). Numerically
+    equivalent to :func:`gqa_attention`; this is the memory-roofline
+    optimization recorded in EXPERIMENTS.md §Perf."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    chunk = min(chunk, Sk)
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)))
+        kv_valid = jnp.pad(kv_valid if kv_valid is not None
+                           else jnp.ones((B, Sk), bool), ((0, 0), (0, pad)))
+    elif kv_valid is None:
+        kv_valid = jnp.ones((B, Sk), bool)
+    nc = (Sk + pad) // chunk
+    kc = jnp.moveaxis(k.reshape(B, nc, chunk, KV, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nc, chunk, KV, hd), 1, 0)
+    pc = jnp.moveaxis(kv_pos.reshape(B, nc, chunk), 1, 0)
+    mc = jnp.moveaxis(kv_valid.reshape(B, nc, chunk), 1, 0)
+
+    qg = (q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+          / math.sqrt(hd))
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_c, v_c, p_c, valid_c = xs
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_c.astype(jnp.float32))
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        delta = q_pos[:, :, None] - p_c[:, None, :]       # [B, Sq, c]
+        ok = (delta >= 0) & (delta < window) & valid_c[:, None, :]
+        s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p, v_c.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc, mc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, hd).astype(v.dtype)
+
+
+def dispatch_attention(cfg, q, k, v, **kw):
+    """Pick the attention implementation from the config."""
+    if cfg.attn_impl == "chunked":
+        return gqa_attention_chunked(q, k, v, chunk=cfg.attn_chunk, **kw)
+    return gqa_attention(q, k, v, **kw)
+
+
+def attention_block(
+    x: jax.Array,
+    p: dict,
+    *,
+    cfg,
+    positions: jax.Array,
+    window,
+    cos: jax.Array,
+    sin: jax.Array,
+    shard: Shard = _noshard,
+    cache_kv: Optional[tuple] = None,   # (k_cache, v_cache, kv_pos, kv_valid)
+):
+    """Self-attention sub-block. Returns (out, (k_new, v_new)).
+
+    Without ``cache_kv`` this is full-sequence (train / prefill) attention;
+    with it, ``x`` holds new tokens attending over cache + themselves is the
+    caller's responsibility (the caller pre-merges cache; see transformer.py).
+    """
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def proj(w, b, nh):
+        y = jnp.einsum("bsd,dhk->bshk", x, w.reshape(D, nh, hd))
+        if b is not None:
+            y = y + b.reshape(nh, hd)
+        return y
+
+    q = proj(p["wq"], p.get("bq"), H)
+    k = proj(p["wk"], p.get("bk"), KV)
+    v = proj(p["wv"], p.get("bv"), KV)
+    q = shard(q, "act_heads")
+    k = shard(k, "act_kv_heads")
+    v = shard(v, "act_kv_heads")
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.rmsnorm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.rmsnorm_eps)
+
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache_kv is None:
+        out = dispatch_attention(
+            cfg, q, k, v, q_pos=positions, kv_pos=positions,
+            window=window, softcap=cfg.attn_logit_softcap)
+    else:
+        k_all, v_all, kv_pos, kv_valid = cache_kv
+        out = dispatch_attention(
+            cfg, q, k_all, v_all, q_pos=positions, kv_pos=kv_pos,
+            window=window, softcap=cfg.attn_logit_softcap,
+            kv_valid=kv_valid)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].reshape(H, hd, D))
+    return shard(out, "act_resid"), (k, v)
+
+
+# --------------------------------------------------------------------------
+# MLP / MoE
+# --------------------------------------------------------------------------
+def swiglu_mlp(x: jax.Array, p: dict, shard: Shard = _noshard) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard(h, "act_ffn")
+    return shard(h @ p["w_down"], "act_resid")
+
+
+def moe_block(
+    x: jax.Array,          # [B, S, D]
+    p: dict,
+    *,
+    cfg,
+    shard: Shard = _noshard,
+    group_size: int = 1024,
+):
+    """Top-k MoE with capacity-based scatter dispatch (no one-hot matmuls).
+
+    Tokens are processed in groups of ``group_size`` so the dispatch buffers
+    stay O(tokens * top_k * capacity_factor) instead of quadratic in the
+    global token count. Overflowing tokens are dropped (standard capacity
+    semantics); the dense residual (arctic) catches them.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    xf = x.reshape(B * S, D)
+    T = xf.shape[0]
+    tg = min(group_size, T)
+    pad = (-T) % tg
+    if pad:
+        xf = jnp.concatenate([xf, jnp.zeros((pad, D), xf.dtype)], 0)
+    G = xf.shape[0] // tg
+    xg = xf.reshape(G, tg, D)
+
+    # --- routing ---------------------------------------------------------
+    router_logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                               p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, K)                     # [G, tg, K]
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    # --- capacity + slot assignment ---------------------------------------
+    C = max(8, int(math.ceil(tg * K / E * cfg.capacity_factor)))
+    tok_expert = jnp.sum(jax.nn.one_hot(topi, E, dtype=jnp.int32), axis=2)  # [G,tg,E]
+    pos_in_expert = jnp.cumsum(tok_expert, axis=1) - tok_expert            # [G,tg,E]
+    pos_choice = jnp.take_along_axis(pos_in_expert, topi, axis=2)          # [G,tg,K]
+    kept = pos_choice < C
+    flat_slot = jnp.where(kept, topi * C + pos_choice, E * C)              # [G,tg,K]
+
+    # --- dispatch (scatter tokens into [G, E*C(+1 overflow), D]) ----------
+    token_ids = jnp.broadcast_to(jnp.arange(tg)[None, :, None], flat_slot.shape)
+
+    def scatter_group(slots_flat, toks_flat):
+        init = jnp.full((E * C + 1,), tg, dtype=jnp.int32)  # tg = zero-pad row
+        return init.at[slots_flat].set(toks_flat)
+
+    slot_token = jax.vmap(scatter_group)(
+        flat_slot.reshape(G, -1), token_ids.reshape(G, -1))                # [G, E*C+1]
+    slot_token = slot_token[:, : E * C]
+    x_padrow = jnp.concatenate([xg, jnp.zeros((G, 1, D), xg.dtype)], axis=1)
+    x_disp = jnp.take_along_axis(
+        x_padrow, slot_token[:, :, None], axis=1).reshape(G, E, C, D)
+    x_disp = shard(x_disp, "moe_dispatch")
+
+    # --- expert computation -----------------------------------------------
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", x_disp, p["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", x_disp, p["w_up"])
+    h = shard(h, "moe_ffn")
+    y_disp = jnp.einsum("gecf,efd->gecd", h, p["w_down"])                  # [G,E,C,D]
+    y_disp = shard(y_disp, "moe_dispatch")
+
+    # --- combine (gather each token's top-k slots, weight, sum) ----------
+    y_flat = y_disp.reshape(G, E * C, D)
+    y_flat = jnp.concatenate([y_flat, jnp.zeros((G, 1, D), y_flat.dtype)], 1)
+    y_choice = jnp.take_along_axis(
+        y_flat, flat_slot.reshape(G, -1)[:, :, None], axis=1
+    ).reshape(G, tg, K, D)
+    y = jnp.sum(y_choice * topw[..., None].astype(y_choice.dtype), axis=2)
+
+    out = y.reshape(-1, D)[:T].reshape(B, S, D)
+    if cfg.dense_residual:
+        out = out + swiglu_mlp(x, p["dense"], shard)
+    # aux router stats (load-balance loss consumers can use this)
+    me = jnp.mean(probs.reshape(-1, E)[:T] if not pad else probs.reshape(-1, E), axis=0)
+    ce = jnp.mean(tok_expert.reshape(-1, E).astype(jnp.float32), axis=0)
+    aux_loss = E * jnp.sum(me * ce)
+    return shard(out, "act_resid"), aux_loss

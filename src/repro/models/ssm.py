@@ -1,0 +1,198 @@
+"""Mamba2 / SSD (state-space duality) layer in pure JAX [arXiv:2405.21060].
+
+Implements the chunked SSD algorithm for train/prefill and the O(1)
+recurrent update for decode. Parameters follow the reference layout:
+in_proj -> (z, x, B, C, dt), short causal depthwise conv over (x, B, C),
+A_log / dt_bias / D per head, gated RMSNorm, out_proj.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+
+D_CONV = 4  # depthwise conv width
+NEG_INF = -2.0 ** 30
+
+
+# --------------------------------------------------------------------------
+# SSD core
+# --------------------------------------------------------------------------
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < t <= i} x[..., t].
+
+    Returns -inf above the diagonal (non-causal entries).
+    """
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, seg, NEG_INF)
+
+
+def ssd_chunked(
+    x: jax.Array,        # [B, S, H, P]  (already multiplied by dt)
+    dtA: jax.Array,      # [B, S, H]     (dt * A, negative)
+    Bmat: jax.Array,     # [B, S, N]     (single group, shared across heads)
+    Cmat: jax.Array,     # [B, S, N]
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # [B, H, P, N]
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact chunked SSD scan. Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    B, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtA = jnp.pad(dtA, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    xc = x.reshape(B, nc, chunk, H, P)
+    ac = dtA.reshape(B, nc, chunk, H).transpose(0, 3, 1, 2)  # [B,H,nc,l]
+    bc = Bmat.reshape(B, nc, chunk, N)
+    cc = Cmat.reshape(B, nc, chunk, N)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                          # [B,H,nc,l]
+
+    # intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(ac))                                 # [B,H,nc,l,l]
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        cc, bc, L, xc.astype(jnp.float32))
+
+    # per-chunk output states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)          # [B,H,nc,l]
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn",
+                        bc, decay_states, xc.astype(jnp.float32))
+
+    # inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(a_cum[..., -1])                    # [B,H,nc]
+    h0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(h, inp):
+        st, dec = inp                                        # [B,H,P,N], [B,H]
+        h_out = h                                            # state entering chunk
+        h = h * dec[..., None, None] + st
+        return h, h_out
+
+    states_t = states.transpose(1, 0, 2, 3, 4)               # [nc,B,H,P,N]
+    decay_t = chunk_decay.transpose(2, 0, 1)                 # [nc,B,H]
+    final, h_in = jax.lax.scan(step, h0, (states_t, decay_t))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                     # [B,nc,H,P,N]
+
+    # contribution of the incoming state to each position in the chunk
+    state_decay = jnp.exp(a_cum)                             # [B,H,nc,l]
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", cc, h_in, state_decay)
+
+    y = (y_diag + y_off).reshape(B, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(
+    x: jax.Array,      # [B, H, P]  (already * dt)
+    dtA: jax.Array,    # [B, H]
+    Bmat: jax.Array,   # [B, N]
+    Cmat: jax.Array,   # [B, N]
+    state: jax.Array,  # [B, H, P, N]
+) -> Tuple[jax.Array, jax.Array]:
+    """Single recurrent SSD step: h' = exp(dtA) h + x B^T ; y = h' C."""
+    state = state.astype(jnp.float32)
+    decay = jnp.exp(dtA.astype(jnp.float32))[..., None, None]
+    upd = x.astype(jnp.float32)[..., None] * Bmat.astype(jnp.float32)[:, None, None, :]
+    new_state = state * decay + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cmat.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+# --------------------------------------------------------------------------
+# Mamba2 layer
+# --------------------------------------------------------------------------
+def _conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def causal_conv(u: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv, width D_CONV. u: [B, S, Cdim], w: [D_CONV, Cdim].
+
+    Returns (out [B,S,Cdim], new_state [B, D_CONV-1, Cdim]).
+    """
+    B, S, Cd = u.shape
+    if state is None:
+        state = jnp.zeros((B, D_CONV - 1, Cd), u.dtype)
+    full = jnp.concatenate([state, u], axis=1)               # [B, S+3, Cd]
+    out = sum(full[:, i : i + S] * w[i][None, None, :] for i in range(D_CONV))
+    new_state = full[:, S : S + D_CONV - 1] if S >= D_CONV - 1 else full[:, -(D_CONV - 1):]
+    return out, new_state
+
+
+def _split_proj(zxbcdt: jax.Array, cfg):
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di : 2 * di]
+    Bm = zxbcdt[..., 2 * di : 2 * di + n]
+    Cm = zxbcdt[..., 2 * di + n : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, x, Bm, Cm, dt
+
+
+def mamba2_forward(
+    h: jax.Array,      # [B, S, D] layer input (post-norm)
+    p: dict,
+    *,
+    cfg,
+    init_state: Optional[jax.Array] = None,
+    conv_state: Optional[jax.Array] = None,
+):
+    """Full-sequence Mamba2 mixer. Returns (out, (final_state, conv_state))."""
+    B, S, D = h.shape
+    di, nh, hp, n = cfg.d_inner, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    zxbcdt = h @ p["in_proj"]
+    z, x, Bm, Cm, dt = _split_proj(zxbcdt, cfg)
+    xbc, new_conv = causal_conv(
+        jnp.concatenate([x, Bm, Cm], axis=-1), p["conv_w"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    x, Bm, Cm = xbc[..., :di], xbc[..., di : di + n], xbc[..., di + n :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,nh]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # [nh]
+    xh = x.reshape(B, S, nh, hp)
+    y, final = ssd_chunked(xh * dt[..., None].astype(xh.dtype),
+                           dt * A, Bm, Cm, cfg.ssm_chunk, init_state)
+    y = y + xh * p["D_skip"][None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"], cfg.rmsnorm_eps)
+    return y @ p["out_proj"], (final, new_conv)
+
+
+def mamba2_decode(
+    h: jax.Array,          # [B, 1, D]
+    p: dict,
+    *,
+    cfg,
+    state: jax.Array,      # [B, nh, hp, n]
+    conv_state: jax.Array,  # [B, D_CONV-1, conv_dim]
+):
+    """One-token recurrent Mamba2 step. Returns (out [B,1,D], (state, conv))."""
+    B, _, D = h.shape
+    di, nh, hp, n = cfg.d_inner, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    zxbcdt = h[:, 0] @ p["in_proj"]
+    z, x, Bm, Cm, dt = _split_proj(zxbcdt, cfg)
+    u = jnp.concatenate([x, Bm, Cm], axis=-1)[:, None]       # [B,1,convdim]
+    out_c, new_conv = causal_conv(u, p["conv_w"], conv_state)
+    xbc = jax.nn.silu(out_c[:, 0])
+    x, Bm, Cm = xbc[..., :di], xbc[..., di : di + n], xbc[..., di + n :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,nh]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = x.reshape(B, nh, hp)
+    y, new_state = ssd_decode_step(xh * dt[..., None].astype(xh.dtype),
+                                   dt * A, Bm, Cm, state)
+    y = y + xh * p["D_skip"][None, :, None]
+    y = y.reshape(B, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"], cfg.rmsnorm_eps)
+    return (y @ p["out_proj"])[:, None], (new_state, new_conv)

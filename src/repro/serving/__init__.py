@@ -1,0 +1,20 @@
+from repro.serving.engine import MODES, MultiAgentEngine, RoundStats, Session
+from repro.serving.kvpool import Allocation, PagedKVPool, PoolExhausted
+from repro.serving.scheduler import (
+    ServiceTimes,
+    max_agents_under_slo,
+    simulate_round_latency,
+)
+
+__all__ = [
+    "MODES",
+    "MultiAgentEngine",
+    "RoundStats",
+    "Session",
+    "Allocation",
+    "PagedKVPool",
+    "PoolExhausted",
+    "ServiceTimes",
+    "max_agents_under_slo",
+    "simulate_round_latency",
+]

@@ -1,0 +1,560 @@
+"""Round-synchronous multi-agent serving engine with four reuse modes:
+
+  recompute  — vLLM without reuse: full batched prefill every round
+  prefix     — vLLM + prefix caching: exact reuse of each agent's own
+               history prefix, fresh compute for everything after it
+  pic        — CacheBlend: per-request position-independent recovery
+               (N separate RoPE-align + selection passes per round)
+  tokendance — the paper: collective recovery (one shared pass/round)
+               + Master-Mirror diff storage + fused restore
+
+All modes share the same model substrate, decode loop and accounting, so
+measured differences are attributable to the reuse strategy.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.collector import KVCollector
+from repro.core.diff_store import (
+    MasterCache,
+    MirrorHandle,
+    build_round_family,
+    compression_stats,
+)
+from repro.core.pic import n_sel_for_blocks
+from repro.core.restore import dense_restore
+from repro.core.rounds import AllGatherTrace, Round, round_prompt
+from repro.core.segments import (
+    SHARED,
+    PromptLayout,
+    SegmentCacheEntry,
+    SegmentIndex,
+    segment_hash,
+)
+from repro.core.rounds import AgentState
+from repro.models import decode_step, prefill
+from repro.models.transformer import extend
+from repro.serving.kvpool import PagedKVPool
+
+MODES = ("recompute", "prefix", "pic", "tokendance")
+
+
+@dataclass
+class RoundStats:
+    round_idx: int
+    mode: str
+    n_agents: int
+    prompt_len: int
+    t_recover: float = 0.0       # prefill / PIC recovery (s)
+    t_restore: float = 0.0       # mirror restore on the critical path (s)
+    t_decode: float = 0.0
+    t_store: float = 0.0         # diff build / segment extraction (s)
+    persistent_bytes: int = 0    # cache state surviving the round
+    transient_peak_bytes: int = 0
+    outputs: Optional[np.ndarray] = None      # [N, G] generated tokens
+    reuse: dict = field(default_factory=dict)
+
+    @property
+    def t_round(self) -> float:
+        return self.t_recover + self.t_restore + self.t_decode + self.t_store
+
+
+@dataclass
+class Session:
+    agent_id: str
+    state: AgentState
+    # prefix mode: the agent's dense cache + the prompt it was built for
+    dense_k: Optional[jax.Array] = None       # [L, S, KV, hd]
+    dense_v: Optional[jax.Array] = None
+    prompt_tokens: Optional[np.ndarray] = None
+    # pic / tokendance: history segment cache
+    hist_entry: Optional[SegmentCacheEntry] = None
+    # tokendance: compressed persistent state
+    mirror: Optional[MirrorHandle] = None
+    is_master: bool = False
+    hist_pending: Optional[tuple] = None   # (hist span len, own-output sid)
+
+
+def _common_prefix(a: np.ndarray, b: np.ndarray) -> int:
+    n = min(a.shape[0], b.shape[0])
+    neq = np.nonzero(a[:n] != b[:n])[0]
+    return int(neq[0]) if neq.size else n
+
+
+class MultiAgentEngine:
+    def __init__(
+        self,
+        params: dict,
+        cfg: ModelConfig,
+        mode: str,
+        *,
+        gen_len: int = 16,
+        recompute_ratio: float = 0.15,
+        block_select: int = 32,
+        check_layer: int = 1,
+        pool_pages: int = 1 << 16,
+        keep_recovered: bool = False,
+    ):
+        assert mode in MODES, mode
+        if mode in ("pic", "tokendance") and (not cfg.has_attention or cfg.has_ssm):
+            # PIC-style reuse is inapplicable to SSM/hybrid state
+            # (DESIGN.md §5); those archs serve via full recompute.
+            mode = "recompute"
+        assert block_select == 0 or gen_len % block_select == 0, \
+            "gen_len must be block-aligned so histories stay aligned"
+        self.params = params
+        self.cfg = cfg
+        self.mode = mode
+        self.gen_len = gen_len
+        self.ratio = recompute_ratio
+        self.block_select = block_select
+        self.sep_id = cfg.vocab_size - 1
+        self.sessions: Dict[str, Session] = {}
+        self.segment_index = SegmentIndex()
+        self.pool = PagedKVPool(cfg, pool_pages)
+        self.keep_recovered = keep_recovered
+        self.last_recovered: Optional[tuple] = None
+        self.collector = KVCollector(
+            params, cfg, check_layer=check_layer,
+            recompute_ratio=recompute_ratio, block_select=block_select)
+        self._jit: dict = {}
+        self._warm: set = set()
+        self.round_idx = 0
+        self.last_outputs: Dict[str, np.ndarray] = {}
+        self.td_master: Optional[MasterCache] = None
+        self._t_restore = 0.0
+
+    # ------------------------------------------------------------------
+    def init_agents(self, trace: AllGatherTrace) -> None:
+        for aid in trace.agent_ids:
+            self.sessions[aid] = Session(
+                aid, AgentState(aid, np.asarray(trace.init_histories[aid])))
+
+    # ---------------------------------------------------------- jit mgmt
+    def _get_jit(self, key, builder):
+        if key not in self._jit:
+            self._jit[key] = jax.jit(builder())
+        return self._jit[key]
+
+    def _timed(self, key, fn, *args):
+        """Warm up new shapes (compile excluded from timings), then time."""
+        if key not in self._warm:
+            jax.block_until_ready(fn(*args))
+            self._warm.add(key)
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        return out, time.perf_counter() - t0
+
+    # ------------------------------------------------------------------
+    def _build_prompts(self, rnd: Round) -> Tuple[np.ndarray, List[PromptLayout], list]:
+        """Prompts for all agents; equal lengths by construction."""
+        shared = rnd.shared_blocks
+        layouts, rows = [], []
+        aids = list(self.sessions)
+        for aid in aids:
+            lay = round_prompt(self.sessions[aid].state, shared,
+                               rnd.tasks[aid], self.sep_id,
+                               align_blocks=self.block_select)
+            layouts.append(lay)
+            rows.append(lay.tokens)
+        lens = {r.shape[0] for r in rows}
+        assert len(lens) == 1, f"round prompts must be equal length, got {lens}"
+        return np.stack(rows), layouts, aids
+
+    # ------------------------------------------------------------------
+    # Phase A implementations
+    # ------------------------------------------------------------------
+    def _recover_recompute(self, tokens: jax.Array):
+        N, S = tokens.shape
+        key = ("prefill", N, S)
+        if key not in self._jit:
+            def f(toks):
+                logits, cache = prefill(self.params, self.cfg, toks, max_len=S)
+                return logits[:, -1], cache
+            self._jit[key] = jax.jit(f)
+        (logits, cache), dt = self._timed(key, self._jit[key], tokens)
+        return logits, cache, dt, {}
+
+    def _recover_prefix(self, tokens: jax.Array, aids: list):
+        N, S = tokens.shape
+        toks_np = np.asarray(tokens)
+        plens = []
+        for i, aid in enumerate(aids):
+            s = self.sessions[aid]
+            if s.prompt_tokens is None or s.dense_k is None:
+                plens.append(0)
+            else:
+                plens.append(min(_common_prefix(toks_np[i], s.prompt_tokens),
+                                 s.dense_k.shape[1]))
+        p = min(plens)  # equal-length sessions give equal p; be safe
+        if p == 0:
+            return self._recover_recompute(tokens)
+
+        kpre = jnp.stack([self.sessions[a].dense_k[:, :p] for a in aids], axis=1)
+        vpre = jnp.stack([self.sessions[a].dense_v[:, :p] for a in aids], axis=1)
+        key = ("extend", N, S, p)
+        if key not in self._jit:
+            def f(toks, kp, vp):
+                L = self.cfg.n_layers
+                KV, hd = self.cfg.n_kv_heads, self.cfg.resolved_head_dim
+                pad = S - p
+                cache = {
+                    "k": jnp.pad(kp, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+                    "v": jnp.pad(vp, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+                    "kv_pos": jnp.broadcast_to(
+                        jnp.arange(S, dtype=jnp.int32)[None], (N, S)),
+                    "kv_valid": jnp.broadcast_to(
+                        jnp.arange(S)[None] < p, (N, S)),
+                    "length": jnp.full((N,), p, jnp.int32),
+                }
+                logits, cache = extend(self.params, self.cfg, toks[:, p:], cache)
+                return logits[:, -1], {"k": cache["k"], "v": cache["v"]}
+            self._jit[key] = jax.jit(f)
+        (logits, cache), dt = self._timed(key, self._jit[key], tokens, kpre, vpre)
+        return logits, cache, dt, {"prefix_len": p}
+
+    def _assemble_cached(self, layouts: List[PromptLayout], aids: list):
+        """Build the shared cached arrays + per-agent history caches."""
+        cfg = self.cfg
+        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+        S = layouts[0].length
+        shared_k = jnp.zeros((L, S, KV, hd), jnp.float32)
+        shared_v = jnp.zeros_like(shared_k)
+        src = np.arange(S, dtype=np.int32)
+        shared_mask = np.zeros(S, bool)
+        for span in layouts[0].spans:
+            if span.kind != SHARED:
+                continue
+            e = self.segment_index.get(span.sid)
+            if e is None:
+                continue
+            shared_k = shared_k.at[:, span.start : span.end].set(e.k)
+            shared_v = shared_v.at[:, span.start : span.end].set(e.v)
+            src[span.start : span.end] = e.src_pos
+            shared_mask[span.start : span.end] = True
+
+        # tokendance: agents' history caches live compressed between rounds;
+        # restore them Master+diff -> dense on the critical path (Alg. 1)
+        self._t_restore = 0.0
+        if self.mode == "tokendance" and self.td_master is not None:
+            t0 = time.perf_counter()
+            self._restore_hist_entries(aids)
+            self._t_restore = time.perf_counter() - t0
+
+        # per-agent history caches (span 0 = private history)
+        hspan = layouts[0].spans[0]
+        priv_mask = np.zeros(S, bool)
+        pk = pv = psrc = None
+        have_hist = all(self.sessions[a].hist_entry is not None for a in aids)
+        if have_hist and hspan.end > hspan.start:
+            priv_mask[hspan.start : hspan.end] = True
+            pks, pvs, srcs = [], [], []
+            for a in aids:
+                e = self.sessions[a].hist_entry
+                assert e.k.shape[1] == len(hspan), (e.k.shape, len(hspan))
+                full_k = jnp.zeros((L, S, KV, hd), jnp.float32)
+                full_v = jnp.zeros_like(full_k)
+                full_k = full_k.at[:, hspan.start : hspan.end].set(e.k)
+                full_v = full_v.at[:, hspan.start : hspan.end].set(e.v)
+                s_ = np.arange(S, dtype=np.int32)
+                s_[hspan.start : hspan.end] = e.src_pos
+                pks.append(full_k)
+                pvs.append(full_v)
+                srcs.append(s_)
+            pk = jnp.stack(pks)
+            pv = jnp.stack(pvs)
+            psrc = jnp.asarray(np.stack(srcs))
+        is_cached = shared_mask | priv_mask
+        return (shared_k, shared_v, jnp.asarray(src), jnp.asarray(shared_mask),
+                pk, pv, psrc, jnp.asarray(priv_mask), is_cached)
+
+    def _restore_hist_entries(self, aids: list) -> None:
+        """Rebuild each agent's history-segment cache from the compressed
+        Master-Mirror state of the previous round plus its own output
+        segment (which doubles as the shared block it produced). All
+        mirrors are restored in ONE vectorized call (§Perf store-path
+        iteration) instead of a per-agent python loop."""
+        from repro.core.restore import dense_restore_batch
+
+        cfg = self.cfg
+        pending = [a for a in aids
+                   if self.sessions[a].hist_entry is None
+                   and self.sessions[a].hist_pending is not None]
+        if not pending:
+            return
+        mirrors = [a for a in pending if not self.sessions[a].is_master]
+        restored = {}
+        if mirrors:
+            ks, vs = dense_restore_batch(
+                [self.sessions[a].mirror for a in mirrors], cfg.rope_theta)
+            restored = {a: (ks[i], vs[i]) for i, a in enumerate(mirrors)}
+        for a in pending:
+            s = self.sessions[a]
+            span_len, out_sid = s.hist_pending          # set in _post_round
+            if s.is_master:
+                rk, rv = self.td_master.k, self.td_master.v
+            else:
+                rk, rv = restored[a]
+            out_e = self.segment_index.get(out_sid)
+            hk = jnp.concatenate([rk[:, :span_len], out_e.k], axis=1)
+            hv = jnp.concatenate([rv[:, :span_len], out_e.v], axis=1)
+            sp = np.concatenate([np.arange(span_len, dtype=np.int32),
+                                 out_e.src_pos])
+            s.hist_entry = SegmentCacheEntry(
+                sid=f"hist:{a}:{self.round_idx}", k=hk, v=hv, src_pos=sp,
+                producer=a, round_idx=self.round_idx)
+
+    def _recover_pic(self, tokens: jax.Array, layouts, aids, collective: bool):
+        N, S = tokens.shape
+        (sk, sv, src, smask, pk, pv, psrc, pmask, is_cached) = \
+            self._assemble_cached(layouts, aids)
+        if not bool(np.asarray(smask).any() or np.asarray(pmask).any()):
+            return self._recover_recompute(tokens)
+        fresh = ~np.asarray(is_cached)
+        n_sel = n_sel_for_blocks(fresh, self.block_select, self.ratio)
+        priv = (pk, pv, psrc, pmask) if pk is not None else None
+
+        t0 = time.perf_counter()
+        if collective:
+            key = ("coll", N, S, n_sel)
+            if key not in self._warm:
+                self.collector.collective_reuse(
+                    aids, tokens, sk, sv, src, smask, n_sel, priv)
+                self._warm.add(key)
+            t0 = time.perf_counter()
+            res = self.collector.collective_reuse(
+                aids, tokens, sk, sv, src, smask, n_sel, priv)
+            jax.block_until_ready(res.pic.recovered_k)
+            dt = time.perf_counter() - t0
+            k = res.pic.recovered_k                        # [L, N, S, KV, hd]
+            v = res.pic.recovered_v
+            logits = res.pic.logits
+            info = {"n_sel": n_sel, "plan": res.plan}
+        else:
+            key = ("serial", S, n_sel)
+            if key not in self._warm:
+                self.collector.serial_reuse(
+                    aids[:1], tokens[:1], sk, sv, src, smask, n_sel,
+                    None if priv is None else tuple(
+                        x[:1] if i < 3 else x for i, x in enumerate(priv)))
+                self._warm.add(key)
+            t0 = time.perf_counter()
+            results = self.collector.serial_reuse(
+                aids, tokens, sk, sv, src, smask, n_sel, priv)
+            jax.block_until_ready([r.recovered_k for r in results])
+            dt = time.perf_counter() - t0
+            k = jnp.concatenate([r.recovered_k for r in results], axis=1)
+            v = jnp.concatenate([r.recovered_v for r in results], axis=1)
+            logits = jnp.concatenate([r.logits for r in results], axis=0)
+            info = {"n_sel": n_sel}
+        return logits, {"k": k, "v": v}, dt, info
+
+    # ------------------------------------------------------------------
+    def _decode(self, first_logits, prefill_cache: dict, N: int, S: int):
+        """Greedy decode gen_len tokens for all agents from a prefill-state
+        cache (attention KV, SSM state, or both)."""
+        cfg, G = self.cfg, self.gen_len
+        total = S + G
+        cache = {"length": jnp.full((N,), S, jnp.int32)}
+        if "k" in prefill_cache:
+            k, v = prefill_cache["k"], prefill_cache["v"]
+            cache.update({
+                "k": jnp.pad(k, ((0, 0), (0, 0), (0, G), (0, 0), (0, 0))),
+                "v": jnp.pad(v, ((0, 0), (0, 0), (0, G), (0, 0), (0, 0))),
+                "kv_pos": jnp.pad(jnp.broadcast_to(
+                    jnp.arange(S, dtype=jnp.int32)[None], (N, S)),
+                    ((0, 0), (0, G))),
+                "kv_valid": jnp.pad(jnp.ones((N, S), bool),
+                                    ((0, 0), (0, G))),
+            })
+        for key_ in ("ssm", "conv"):
+            if key_ in prefill_cache:
+                cache[key_] = prefill_cache[key_]
+        key = ("decode", N, total)
+        if key not in self._jit:
+            def f(tok, cache):
+                logits, cache = decode_step(self.params, cfg, tok, cache)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+            self._jit[key] = jax.jit(f)
+        step = self._jit[key]
+        tok = jnp.argmax(first_logits, axis=-1).astype(jnp.int32)
+        if key not in self._warm:
+            jax.block_until_ready(step(tok, cache))
+            self._warm.add(key)
+        outs = [tok]
+        t0 = time.perf_counter()
+        for _ in range(G - 1):
+            tok, cache = step(tok, cache)
+            outs.append(tok)
+        jax.block_until_ready(tok)
+        dt = time.perf_counter() - t0
+        return np.stack([np.asarray(t) for t in outs], axis=1), cache, dt
+
+    # ------------------------------------------------------------------
+    def run_round(self, rnd: Round) -> RoundStats:
+        cfg = self.cfg
+        # generate mode: use previous outputs as this round's shared blocks
+        if self.round_idx > 0 and self.last_outputs:
+            rnd = Round(rnd.index,
+                        [self.last_outputs[a] for a in self.sessions],
+                        rnd.tasks)
+        tokens_np, layouts, aids = self._build_prompts(rnd)
+        tokens = jnp.asarray(tokens_np)
+        N, S = tokens.shape
+        stats = RoundStats(self.round_idx, self.mode, N, S)
+
+        # ---- phase A: recovery / prefill --------------------------------
+        if self.mode == "recompute" or self.round_idx == 0:
+            logits, pcache, dt, info = self._recover_recompute(tokens)
+        elif self.mode == "prefix":
+            logits, pcache, dt, info = self._recover_prefix(tokens, aids)
+        elif self.mode == "pic":
+            logits, pcache, dt, info = self._recover_pic(tokens, layouts, aids, False)
+        else:
+            logits, pcache, dt, info = self._recover_pic(tokens, layouts, aids, True)
+        stats.t_recover = dt
+        stats.t_restore = self._t_restore
+        self._t_restore = 0.0
+        stats.reuse.update({k_: v_ for k_, v_ in info.items() if k_ != "plan"})
+        if self.keep_recovered and "k" in pcache:
+            self.last_recovered = (np.asarray(pcache["k"]),
+                                   np.asarray(pcache["v"]), list(layouts))
+
+        # transient working set: N dense caches of S+G tokens
+        self.pool.free_transient()
+        for a in aids:
+            self.pool.free(f"round:{a}")
+            self.pool.alloc_tokens(f"round:{a}", S + self.gen_len,
+                                   persistent=False)
+
+        # ---- phase C: decode ---------------------------------------------
+        outputs, cache, dt_dec = self._decode(logits, pcache, N, S)
+        stats.t_decode = dt_dec
+        stats.outputs = outputs
+
+        # ---- phase D: bookkeeping / storage --------------------------------
+        t0 = time.perf_counter()
+        self._post_round(rnd, layouts, aids, cache, outputs, info, stats)
+        stats.t_store = time.perf_counter() - t0
+
+        stats.transient_peak_bytes = self.pool.peak_bytes()
+        self.pool.free_transient()
+        stats.persistent_bytes = self._persistent_bytes()
+        self.round_idx += 1
+        return stats
+
+    # ------------------------------------------------------------------
+    def _post_round(self, rnd, layouts, aids, cache, outputs, info, stats):
+        cfg = self.cfg
+        S = layouts[0].length
+        G = self.gen_len
+        hspan = layouts[0].spans[0]
+
+        # histories grow by each agent's own output
+        for i, a in enumerate(aids):
+            self.sessions[a].state.extend_history(outputs[i])
+            self.last_outputs[a] = outputs[i]
+
+        if self.mode == "recompute" or "k" not in cache:
+            return
+        kc, vc = cache["k"], cache["v"]   # [L, N, S+G, KV, hd]
+
+        if self.mode == "prefix":
+            for i, a in enumerate(aids):
+                s = self.sessions[a]
+                s.dense_k = kc[:, i]
+                s.dense_v = vc[:, i]
+                s.prompt_tokens = np.concatenate(
+                    [np.asarray(layouts[i].tokens), outputs[i]])
+                self.pool.free(f"sess:{a}")
+                self.pool.alloc_tokens(f"sess:{a}", S + G, persistent=True)
+            return
+
+        # pic / tokendance: extract next-round segments
+        # (a) each agent's output block O_i (shared next round)
+        for i, a in enumerate(aids):
+            sid = segment_hash(outputs[i])
+            self.segment_index.put(SegmentCacheEntry(
+                sid=sid, k=kc[:, i, S : S + G], v=vc[:, i, S : S + G],
+                src_pos=np.arange(S, S + G, dtype=np.int32),
+                producer=a, round_idx=self.round_idx))
+        if self.mode == "pic":
+            # CacheBlend keeps dense segment entries per agent
+            for i, a in enumerate(aids):
+                hk = jnp.concatenate([kc[:, i, hspan.start : hspan.end],
+                                      kc[:, i, S : S + G]], axis=1)
+                hv = jnp.concatenate([vc[:, i, hspan.start : hspan.end],
+                                      vc[:, i, S : S + G]], axis=1)
+                sp = np.concatenate([
+                    np.arange(hspan.start, hspan.end, dtype=np.int32),
+                    np.arange(S, S + G, dtype=np.int32)])
+                self.sessions[a].hist_entry = SegmentCacheEntry(
+                    sid=f"hist:{a}:{self.round_idx}", k=hk, v=hv, src_pos=sp,
+                    producer=a, round_idx=self.round_idx)
+                self.pool.free(f"hist:{a}")
+                self.pool.alloc_tokens(f"hist:{a}", hk.shape[1], persistent=True)
+                self.pool.free(f"out:{a}")
+                self.pool.alloc_tokens(f"out:{a}", G, persistent=True)
+            return
+
+        # tokendance: Master-Mirror compression of the round family over
+        # the prefill region [0, S); the decode tails are the O_i segments
+        # extracted above (irreducible new content, stored once and shared)
+        plan = info.get("plan")
+        master_idx = plan.master if plan is not None else 0
+        ks = jnp.swapaxes(kc[:, :, :S], 0, 1)   # [N, L, S, KV, hd]
+        vs = jnp.swapaxes(vc[:, :, :S], 0, 1)
+        master, handles = build_round_family(
+            aids, ks, vs, np.arange(S), master_idx,
+            block_tokens=self.block_select or 32)
+        self.td_master = master
+        cstats = compression_stats(master, handles)
+        stats.reuse["compression"] = cstats
+        hi = 0
+        for i, a in enumerate(aids):
+            s = self.sessions[a]
+            s.is_master = i == master_idx
+            s.mirror = None if s.is_master else handles[hi]
+            if not s.is_master:
+                hi += 1
+            # history cache deferred: restored from Master+diff next round
+            s.hist_entry = None
+            s.hist_pending = (hspan.end - hspan.start,
+                              segment_hash(outputs[i]))
+        # ledger: one dense master + sparse mirrors + the N output segments
+        self.pool.free("td:master")
+        self.pool.alloc_tokens("td:master", S, persistent=True)
+        mirror_bytes = sum(h.nbytes() for h in handles)
+        self.pool.free("td:mirrors")
+        self.pool.alloc(
+            "td:mirrors", -(-mirror_bytes // self.pool.page_bytes()),
+            persistent=True)
+        for a in aids:
+            self.pool.free(f"out:{a}")
+            self.pool.alloc_tokens(f"out:{a}", G, persistent=True)
+
+    # ------------------------------------------------------------------
+    def _persistent_bytes(self) -> int:
+        total = 0
+        for owner in self.pool.owners():
+            a = self.pool._allocs[owner]
+            if a.persistent:
+                total += a.n_pages * self.pool.page_bytes()
+        return total
+
+    # ------------------------------------------------------------------
+    def run_trace(self, trace: AllGatherTrace, n_rounds: Optional[int] = None):
+        self.init_agents(trace)
+        out = []
+        for rnd in trace.rounds[: n_rounds or len(trace.rounds)]:
+            out.append(self.run_round(rnd))
+        return out

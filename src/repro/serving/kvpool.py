@@ -1,0 +1,100 @@
+"""Paged KV cache pool: block-granular allocation + byte accounting.
+
+The pool backs two roles: (a) physical page tensors for the fused-restore
+path (kernels write through slot maps into these pages), and (b) the
+capacity ledger the benchmarks read (peak usage, persistent-vs-transient
+split — the quantities behind the paper's Figs. 2 and 10).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+class PoolExhausted(Exception):
+    """Raised when an allocation cannot be satisfied; the engine treats it
+    as a preemption/swap event (latency penalty)."""
+
+
+@dataclass
+class Allocation:
+    owner: str
+    pages: np.ndarray        # int32 page ids
+    persistent: bool         # survives the round (agent state) or not
+
+    @property
+    def n_pages(self) -> int:
+        return int(self.pages.shape[0])
+
+
+class PagedKVPool:
+    def __init__(self, cfg: ModelConfig, n_pages: int,
+                 block_tokens: int = 32, dtype=jnp.float32,
+                 materialize: bool = False):
+        self.cfg = cfg
+        self.n_pages = n_pages
+        self.bt = block_tokens
+        self.dtype = jnp.dtype(dtype)
+        self._free: List[int] = list(range(n_pages))
+        self._allocs: Dict[str, Allocation] = {}
+        self.peak_pages = 0
+        self.swap_events = 0
+        if materialize and cfg.has_attention:
+            KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+            shape = (cfg.n_layers, n_pages, block_tokens, KV, hd)
+            self.pages_k = jnp.zeros(shape, self.dtype)
+            self.pages_v = jnp.zeros(shape, self.dtype)
+        else:
+            self.pages_k = self.pages_v = None
+
+    # ------------------------------------------------------------- sizing
+    def page_bytes(self) -> int:
+        KV, hd = self.cfg.n_kv_heads, self.cfg.resolved_head_dim
+        return 2 * self.cfg.n_layers * self.bt * KV * hd * self.dtype.itemsize
+
+    def pages_for_tokens(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.bt)
+
+    # --------------------------------------------------------------- api
+    def alloc(self, owner: str, n_pages: int, *, persistent: bool) -> Allocation:
+        if len(self._free) < n_pages:
+            raise PoolExhausted(
+                f"{owner}: need {n_pages}, free {len(self._free)}/{self.n_pages}")
+        pages = np.asarray([self._free.pop() for _ in range(n_pages)], np.int32)
+        a = Allocation(owner, pages, persistent)
+        self._allocs[owner] = a
+        self.peak_pages = max(self.peak_pages, self.used_pages())
+        return a
+
+    def alloc_tokens(self, owner: str, n_tokens: int, *, persistent: bool) -> Allocation:
+        return self.alloc(owner, self.pages_for_tokens(n_tokens),
+                          persistent=persistent)
+
+    def free(self, owner: str) -> None:
+        a = self._allocs.pop(owner, None)
+        if a is not None:
+            self._free.extend(int(p) for p in a.pages)
+
+    def free_transient(self) -> None:
+        for owner in [o for o, a in self._allocs.items() if not a.persistent]:
+            self.free(owner)
+
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def used_bytes(self) -> int:
+        return self.used_pages() * self.page_bytes()
+
+    def peak_bytes(self) -> int:
+        return self.peak_pages * self.page_bytes()
+
+    def utilization(self) -> float:
+        return self.used_pages() / self.n_pages
+
+    def owners(self) -> List[str]:
+        return list(self._allocs)

@@ -1,0 +1,23 @@
+from repro.training.data import DataConfig, SyntheticTokens
+from repro.training.optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_update,
+    init_adamw,
+    lr_at,
+)
+from repro.training.train_loop import TrainResult, loss_fn, make_train_step, train
+
+__all__ = [
+    "DataConfig",
+    "SyntheticTokens",
+    "AdamWConfig",
+    "AdamWState",
+    "adamw_update",
+    "init_adamw",
+    "lr_at",
+    "TrainResult",
+    "loss_fn",
+    "make_train_step",
+    "train",
+]

@@ -1,0 +1,35 @@
+"""Minimal npz checkpointing for parameter/optimizer pytrees (no orbax)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[dict, list]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}, treedef
+
+
+def save(path: str, tree, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays, treedef = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
+    with open(path.removesuffix(".npz") + ".json", "w") as f:
+        json.dump({"treedef": str(treedef), "n_leaves": len(arrays),
+                   "metadata": metadata or {}}, f)
+
+
+def load(path: str, like_tree):
+    """Load into the structure of ``like_tree`` (leaf order must match)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    leaves, treedef = jax.tree_util.tree_flatten(like_tree)
+    assert len(leaves) == len(data.files), \
+        f"checkpoint has {len(data.files)} leaves, expected {len(leaves)}"
+    new_leaves = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    for old, new in zip(leaves, new_leaves):
+        assert old.shape == new.shape, (old.shape, new.shape)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

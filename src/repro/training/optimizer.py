@@ -1,0 +1,79 @@
+"""AdamW in pure JAX (no optax): pytree-structured moments, decoupled
+weight decay, global-norm clipping, cosine schedule with warmup."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def init_adamw(params: dict) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(1, cfg.warmup_steps)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.lr * (cfg.min_lr_frac
+                    + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def clip_by_global_norm(grads: dict, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw_update(cfg: AdamWConfig, params: dict, grads: dict,
+                 state: AdamWState):
+    """One AdamW step. Returns (params', state', metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    b1, b2 = cfg.betas
+    lr = lr_at(cfg, step)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step, new_m, new_v), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,121 @@
+"""Training step + loop: next-token cross entropy (+ MoE aux loss),
+AdamW, remat'd scanned layers. The same train_step is what the multi-pod
+dry-run lowers for the ``train_4k`` input shape."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward, init_params
+from repro.models.layers import _noshard
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: jax.Array) -> jax.Array:
+    """Mean next-token cross entropy. logits [B,S,V], labels/mask [B,S]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_xent(params, cfg: ModelConfig, h: jax.Array, labels: jax.Array,
+                 mask: jax.Array, chunk: int) -> jax.Array:
+    """Next-token xent computed per sequence chunk so the full [B, S, V]
+    logits tensor is never materialized (memory-roofline optimization for
+    huge-vocab archs; EXPERIMENTS.md §Perf)."""
+    from repro.models.transformer import _logits
+
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = (S + pad) // chunk
+    hc = jnp.moveaxis(h.reshape(B, nc, chunk, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(B, nc, chunk), 1, 0)
+
+    def body(carry, xs):
+        h_c, l_c, m_c = xs
+        logits = _logits(params, cfg, h_c, _noshard)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, l_c[..., None], axis=-1)[..., 0]
+        return (carry[0] - jnp.sum(ll * m_c), carry[1] + jnp.sum(m_c)), None
+
+    (num, den), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (hc, lc, mc))
+    return num / jnp.maximum(den, 1.0)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            mask: jax.Array, *, shard=_noshard, remat: bool = True,
+            aux_weight: float = 0.01, frontend_embeds=None,
+            unroll: bool = False):
+    if cfg.xent_chunk:
+        h, aux = forward(params, cfg, tokens, shard=shard, remat=remat,
+                         frontend_embeds=frontend_embeds, unroll=unroll,
+                         return_hidden=True)
+        loss = chunked_xent(params, cfg, h[:, :-1], tokens[:, 1:],
+                            mask[:, 1:], cfg.xent_chunk)
+    else:
+        logits, aux = forward(params, cfg, tokens, shard=shard, remat=remat,
+                              frontend_embeds=frontend_embeds, unroll=unroll)
+        loss = softmax_xent(logits[:, :-1], tokens[:, 1:], mask[:, 1:])
+    total = loss + (aux_weight * aux if cfg.is_moe else 0.0)
+    return total, {"xent": loss, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig, *, shard=_noshard,
+                    remat: bool = True, unroll: bool = False) -> Callable:
+    """A pure train_step(params, opt_state, tokens, mask) function, ready
+    for jax.jit with in/out shardings."""
+
+    def train_step(params, opt_state, tokens, mask):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, tokens, mask, shard=shard, remat=remat,
+                              unroll=unroll),
+            has_aux=True)(params)
+        params, opt_state, om = adamw_update(opt, params, grads, opt_state)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+@dataclass
+class TrainResult:
+    losses: list
+    steps: int
+    wall_s: float
+    params: Optional[dict] = None
+    opt_state: Optional[object] = None
+
+
+def train(cfg: ModelConfig, opt: AdamWConfig, data_iter, n_steps: int,
+          *, seed: int = 0, log_every: int = 10,
+          params: Optional[dict] = None, log=print) -> TrainResult:
+    """Single-host training loop used by the examples and smoke tests."""
+    params = params or init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = init_adamw(params)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    losses = []
+    t0 = time.time()
+    for i, (tokens, mask) in enumerate(data_iter):
+        if i >= n_steps:
+            break
+        params, opt_state, m = step_fn(params, opt_state,
+                                       jnp.asarray(tokens), jnp.asarray(mask))
+        losses.append(float(m["loss"]))
+        if log_every and i % log_every == 0:
+            log(f"step {i:5d} loss {losses[-1]:.4f} "
+                f"gnorm {float(m['grad_norm']):.3f} lr {float(m['lr']):.2e}")
+    return TrainResult(losses, len(losses), time.time() - t0, params, opt_state)

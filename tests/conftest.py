@@ -1,0 +1,14 @@
+import jax
+import pytest
+
+# Smoke tests and benches must see the single real CPU device — the 512
+# placeholder devices are set ONLY inside repro.launch.dryrun.
+assert "xla_force_host_platform_device_count" not in str(
+    __import__("os").environ.get("XLA_FLAGS", ""))
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,256 @@
+"""Unit tests for the paper's core: segments, PIC recovery, the collector,
+diff-aware storage and both restore paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    PRIVATE,
+    SHARED,
+    TASK,
+    KVCollector,
+    Segment,
+    SegmentCacheEntry,
+    SegmentIndex,
+    build_prompt,
+    build_round_family,
+    compression_stats,
+    dense_restore,
+    dense_restore_paged,
+    fused_restore_paged,
+    group_compatible,
+    segment_hash,
+    similarity_master,
+    split_prompt,
+)
+from repro.core.pic import align_cached_keys, n_sel_for, n_sel_for_blocks, pic_prefill
+from repro.core.segments import aligned_segment
+from repro.models import forward, init_params, prefill
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen2.5-7b").replace(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ----------------------------------------------------------------- segments
+def test_segment_hash_position_independent():
+    t = [5, 6, 7, 8]
+    assert segment_hash(t) == segment_hash(np.asarray(t))
+    assert segment_hash(t) != segment_hash([5, 6, 7, 9])
+
+
+def test_build_and_split_prompt_roundtrip():
+    segs = [Segment((1, 2, 3), PRIVATE), Segment((4, 5), SHARED),
+            Segment((6,), TASK)]
+    lay = build_prompt(segs, sep_id=99)
+    assert lay.tokens.tolist() == [1, 2, 3, 99, 4, 5, 99, 6]
+    spans = split_prompt(lay.tokens, 99)
+    assert spans == [(0, 3), (4, 6), (7, 8)]
+    assert [s.sid for s in lay.spans] == [s.sid for s in
+                                          [segs[0], segs[1], segs[2]]]
+
+
+def test_aligned_segment_pads_to_blocks():
+    s = aligned_segment(range(40), SHARED, 32, pad_id=0)
+    assert len(s) == 64
+    # identity covers the pads -> dedup still works
+    assert s.sid == aligned_segment(range(40), SHARED, 32, pad_id=0).sid
+    assert s.sid != aligned_segment(range(40), SHARED, 32, pad_id=1).sid
+
+
+def test_segment_index_hit_miss():
+    idx = SegmentIndex()
+    e = SegmentCacheEntry("abc", jnp.zeros((2, 4, 1, 8)), jnp.zeros((2, 4, 1, 8)),
+                          np.arange(4))
+    idx.put(e)
+    assert idx.get("abc") is e and idx.hits == 1
+    assert idx.get("nope") is None and idx.misses == 1
+    assert idx.nbytes() == e.nbytes()
+
+
+def test_group_compatible():
+    m1 = np.array([True, False])
+    m2 = np.array([True, True])
+    groups = group_compatible([("a", 2, m1), ("b", 2, m1), ("c", 2, m2),
+                               ("d", 3, m1[:1])])
+    sizes = sorted(len(g) for g in groups)
+    assert sizes == [1, 1, 2]
+
+
+def test_similarity_master_picks_most_overlapping():
+    toks = [np.array([1, 2, 3, 4]), np.array([1, 2, 3, 5]),
+            np.array([90, 91, 92, 93])]
+    assert similarity_master(toks) in (0, 1)
+
+
+# ---------------------------------------------------------------------- PIC
+def test_pic_exact_cache_recovers_exactly(setup):
+    """Cached KV at the same positions -> zero deviation, exact logits."""
+    cfg, params = setup
+    S = 64
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab_size)
+    full, cache = prefill(params, cfg, toks, max_len=S)
+    ek, ev = cache["k"][:, 0], cache["v"][:, 0]
+    src = jnp.arange(S, dtype=jnp.int32)
+    cached = jnp.ones(S, bool).at[S - 1].set(False)
+    res = pic_prefill(params, cfg, toks, ek, ev, src, cached, n_sel=8)
+    assert float(res.deviation.max()) < 1e-9
+    np.testing.assert_allclose(res.logits[0], full[0, -1], atol=1e-5)
+    np.testing.assert_allclose(res.recovered_k[:, 0], ek, atol=1e-5)
+
+
+def test_pic_full_selection_equals_recompute(setup):
+    """Selecting every position == full recompute (logits match forward)."""
+    cfg, params = setup
+    S = 48
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, S), 0, cfg.vocab_size)
+    full, _ = forward(params, cfg, toks)
+    zeros_k = jnp.zeros((cfg.n_layers, S, cfg.n_kv_heads, cfg.resolved_head_dim))
+    res = pic_prefill(params, cfg, toks, zeros_k, zeros_k,
+                      jnp.arange(S, dtype=jnp.int32), jnp.zeros(S, bool),
+                      n_sel=S)
+    np.testing.assert_allclose(res.logits[0], full[0, -1], atol=3e-5, rtol=1e-4)
+
+
+def test_pic_rope_alignment_layer0_exact(setup):
+    """Layer-0 keys are context-free: realignment must be exact."""
+    cfg, params = setup
+    S, off = 48, 11
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, S), 0, cfg.vocab_size)
+    pad = jax.random.randint(jax.random.PRNGKey(4), (1, off), 0, cfg.vocab_size)
+    _, c_tgt = prefill(params, cfg, toks, max_len=S)
+    _, c_src = prefill(params, cfg, jnp.concatenate([pad, toks], 1),
+                       max_len=S + off)
+    seg_k = c_src["k"][:, 0, off:]
+    al = align_cached_keys(seg_k, jnp.arange(off, S + off, dtype=jnp.int32),
+                           jnp.arange(S, dtype=jnp.int32), cfg.rope_theta)
+    np.testing.assert_allclose(al[0], c_tgt["k"][:, 0][0], atol=1e-5)
+
+
+def test_pic_collective_equals_serial(setup):
+    """Paper §6.6: grouped execution changes order, not results."""
+    cfg, params = setup
+    N, S = 3, 96
+    shared = jax.random.randint(jax.random.PRNGKey(5), (64,), 0, cfg.vocab_size)
+    priv = jax.random.randint(jax.random.PRNGKey(6), (N, 32), 0, cfg.vocab_size)
+    toks = jnp.concatenate([priv, jnp.broadcast_to(shared[None], (N, 64))], 1)
+    _, c = prefill(params, cfg, shared[None], max_len=64)
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    ck = jnp.zeros((L, S, KV, hd)).at[:, 32:].set(c["k"][:, 0])
+    cv = jnp.zeros((L, S, KV, hd)).at[:, 32:].set(c["v"][:, 0])
+    src = jnp.arange(S, dtype=jnp.int32).at[32:].set(jnp.arange(64))
+    mask = jnp.zeros(S, bool).at[32:].set(True)
+    coll = KVCollector(params, cfg, block_select=32)
+    n_sel = n_sel_for_blocks(~np.asarray(mask), 32, 0.2)
+    res_c = coll.collective_reuse(["a", "b", "c"], toks, ck, cv, src, mask, n_sel)
+    res_s = coll.serial_reuse(["a", "b", "c"], toks, ck, cv, src, mask, n_sel)
+    for i in range(N):
+        np.testing.assert_allclose(res_c.pic.recovered_k[:, i],
+                                   res_s[i].recovered_k[:, 0], atol=1e-5)
+        np.testing.assert_allclose(res_c.pic.logits[i], res_s[i].logits[0],
+                                   atol=1e-4)
+
+
+def test_n_sel_helpers():
+    assert n_sel_for(10, 100, 0.15) == 25
+    fresh = np.zeros(128, bool)
+    fresh[:32] = True  # one fresh block
+    n = n_sel_for_blocks(fresh, 32, 0.25)
+    assert n % 32 == 0 and n >= 64  # fresh block + >=1 recompute block
+
+
+# --------------------------------------------------------------- diff store
+def _family(cfg, params, N=3, S=128):
+    toks = jax.random.randint(jax.random.PRNGKey(7), (N, S), 0, cfg.vocab_size)
+    ks, vs = [], []
+    for i in range(N):
+        _, c = prefill(params, cfg, toks[i : i + 1], max_len=S)
+        ks.append(c["k"][:, 0])
+        vs.append(c["v"][:, 0])
+    # make siblings: mirror = master with a couple of perturbed blocks
+    base_k = jnp.stack([ks[0]] * N)
+    base_v = jnp.stack([vs[0]] * N)
+    base_k = base_k.at[1, :, 0:32].set(ks[1][:, 0:32])
+    base_v = base_v.at[1, :, 0:32].set(vs[1][:, 0:32])
+    base_k = base_k.at[2, :, 64:96].set(ks[2][:, 64:96])
+    return base_k, base_v
+
+
+def test_master_mirror_roundtrip_exact(setup):
+    cfg, params = setup
+    ks, vs = _family(cfg, params)
+    master, handles = build_round_family(
+        ["a", "b", "c"], ks, vs, np.arange(128), master_idx=0)
+    assert len(handles) == 2
+    assert handles[0].diff.n_blocks == 1 and handles[1].diff.n_blocks == 1
+    for h, i in zip(handles, [1, 2]):
+        rk, rv = dense_restore(h, 1e4)
+        np.testing.assert_array_equal(rk, ks[i])
+        np.testing.assert_array_equal(rv, vs[i])
+    st = compression_stats(master, handles)
+    # 3 caches x 4 blocks -> master(4) + 2 mirrors(1 block + metadata each)
+    assert st["compression_ratio"] > 1.9
+    assert st["avg_changed_blocks"] == 1.0
+
+
+def test_fused_restore_equals_dense_paged(setup):
+    cfg, params = setup
+    ks, vs = _family(cfg, params)
+    _, handles = build_round_family(["a", "b", "c"], ks, vs,
+                                    np.arange(128), master_idx=0)
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    nb = 4
+    pool_k = jnp.zeros((L, nb + 2, 32, KV, hd))
+    pool_v = jnp.zeros_like(pool_k)
+    slot_map = jnp.asarray([5, 0, 3, 1], jnp.int32)
+    d_k, d_v = dense_restore_paged(handles[0], 1e4, slot_map, pool_k, pool_v)
+    for use_kernel in (False, True):
+        f_k, f_v = fused_restore_paged(handles[0], 1e4, slot_map,
+                                       pool_k, pool_v, use_kernel=use_kernel)
+        np.testing.assert_allclose(f_k, d_k, atol=1e-5)
+        np.testing.assert_allclose(f_v, d_v, atol=1e-5)
+
+
+def test_mirror_handle_is_lazy_and_small(setup):
+    cfg, params = setup
+    ks, vs = _family(cfg, params)
+    master, handles = build_round_family(["a", "b", "c"], ks, vs,
+                                         np.arange(128), master_idx=0)
+    # a mirror stores ~1 of 4 blocks -> ~25% of a dense cache + metadata
+    assert handles[0].nbytes() < 0.3 * master.nbytes()
+
+
+def test_dense_restore_batch_matches_single(setup):
+    """The vectorized family restore equals per-mirror dense restore."""
+    from repro.core.restore import dense_restore_batch
+
+    cfg, params = setup
+    ks, vs = _family(cfg, params)
+    _, handles = build_round_family(["a", "b", "c"], ks, vs,
+                                    np.arange(128), master_idx=0)
+    bk, bv = dense_restore_batch(handles, cfg.rope_theta)
+    for i, h in enumerate(handles):
+        rk, rv = dense_restore(h, cfg.rope_theta)
+        np.testing.assert_array_equal(bk[i], rk)
+        np.testing.assert_array_equal(bv[i], rv)
+
+
+def test_dense_restore_batch_empty_diff(setup):
+    """A mirror identical to the master restores to the master exactly."""
+    from repro.core.restore import dense_restore_batch
+
+    cfg, params = setup
+    ks, vs = _family(cfg, params)
+    ks = ks.at[1].set(ks[0])  # mirror 1 identical -> zero diff blocks
+    vs = vs.at[1].set(vs[0])
+    _, handles = build_round_family(["a", "b", "c"], ks, vs,
+                                    np.arange(128), master_idx=0)
+    assert handles[0].diff.n_blocks == 0
+    bk, bv = dense_restore_batch(handles, cfg.rope_theta)
+    np.testing.assert_array_equal(bk[0], ks[0])
+    np.testing.assert_array_equal(bv[0], vs[0])

@@ -1,0 +1,154 @@
+"""Pallas kernel sweeps: every kernel validated against its pure-jnp
+oracle (ref.py) across shapes and dtypes, in interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.block_diff import block_diff_kernel
+from repro.kernels.diff_restore import fused_diff_restore_kernel
+from repro.kernels.flash_prefill import flash_prefill_kernel
+from repro.kernels.rope_align import rope_align_kernel
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype):
+    x = RNG.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+def _tol(dtype, atol32=2e-5):
+    return dict(atol=3e-2, rtol=3e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=atol32, rtol=2e-5)
+
+
+# --------------------------------------------------------------- rope_align
+@pytest.mark.parametrize("S,KV,hd", [(64, 1, 32), (128, 2, 64), (256, 4, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rope_align_sweep(S, KV, hd, dtype):
+    k = _rand((S, KV, hd), dtype)
+    src = jnp.asarray(RNG.integers(0, 1000, S), jnp.int32)
+    tgt = jnp.asarray(RNG.integers(0, 1000, S), jnp.int32)
+    out = rope_align_kernel(k, src, tgt, 10_000.0, interpret=True)
+    exp = ref.rope_align_ref(k, src, tgt, 10_000.0)
+    # |delta| up to 1000 -> f32 angle ULP differences (exp/log vs pow freqs)
+    np.testing.assert_allclose(np.float32(out), np.float32(exp),
+                               **_tol(dtype, atol32=3e-4))
+
+
+def test_rope_align_identity():
+    k = _rand((64, 2, 32), jnp.float32)
+    pos = jnp.arange(64, dtype=jnp.int32)
+    out = rope_align_kernel(k, pos, pos, 10_000.0, interpret=True)
+    np.testing.assert_allclose(out, k, atol=1e-6)
+
+
+def test_rope_align_composes():
+    """shift(a->b) then shift(b->c) == shift(a->c)."""
+    k = _rand((64, 2, 64), jnp.float32)
+    a = jnp.asarray(RNG.integers(0, 500, 64), jnp.int32)
+    b = jnp.asarray(RNG.integers(0, 500, 64), jnp.int32)
+    c = jnp.asarray(RNG.integers(0, 500, 64), jnp.int32)
+    two = rope_align_kernel(
+        rope_align_kernel(k, a, b, 1e4, interpret=True), b, c, 1e4,
+        interpret=True)
+    one = rope_align_kernel(k, a, c, 1e4, interpret=True)
+    np.testing.assert_allclose(two, one, atol=1e-4)
+
+
+# --------------------------------------------------------------- block_diff
+@pytest.mark.parametrize("L,S,KV,hd,bt", [(2, 128, 2, 32, 32), (4, 256, 4, 64, 32),
+                                          (1, 64, 1, 128, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_diff_sweep(L, S, KV, hd, bt, dtype):
+    m = _rand((L, S, KV, hd), dtype)
+    x = jnp.asarray(m)
+    # perturb a few positions
+    x = x.at[L - 1, 5].add(jnp.asarray(0.5, dtype))
+    x = x.at[0, S - 1].add(jnp.asarray(0.25, dtype))
+    got = block_diff_kernel(m, x, bt, interpret=True)
+    exp = ref.block_diff_ref(m, x, bt)
+    np.testing.assert_allclose(got, exp, atol=1e-6)
+    mask = np.asarray(got) > 0
+    assert mask[0] and mask[-1] and not mask[1:-1].any()
+
+
+# ------------------------------------------------------------ flash_prefill
+@pytest.mark.parametrize("H,KV,S,hd", [(4, 2, 256, 64), (8, 8, 128, 32),
+                                       (2, 1, 512, 128)])
+@pytest.mark.parametrize("window", [0, 100])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill_sweep(H, KV, S, hd, window, dtype):
+    q = _rand((H, S, hd), dtype)
+    k = _rand((KV, S, hd), dtype)
+    v = _rand((KV, S, hd), dtype)
+    got = flash_prefill_kernel(q, k, v, causal=True, window=window,
+                               block_q=128, block_k=128, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.float32(got), np.float32(exp), **_tol(dtype))
+
+
+def test_flash_prefill_blocks_shapes():
+    """Non-default tile sizes still match the oracle."""
+    q = _rand((2, 256, 64), jnp.float32)
+    k = _rand((2, 256, 64), jnp.float32)
+    v = _rand((2, 256, 64), jnp.float32)
+    for bq, bk in [(64, 128), (128, 64), (32, 32)]:
+        got = flash_prefill_kernel(q, k, v, block_q=bq, block_k=bk,
+                                   interpret=True)
+        exp = ref.flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(got, exp, atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------- fused_diff_restore
+@pytest.mark.parametrize("L,nb,bt,KV,hd", [(2, 8, 32, 2, 32), (3, 4, 16, 1, 64),
+                                           (1, 16, 32, 4, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_diff_restore_sweep(L, nb, bt, KV, hd, dtype):
+    mk = _rand((L, nb, bt, KV, hd), dtype)
+    mv = _rand((L, nb, bt, KV, hd), dtype)
+    ndb = max(1, nb // 3)
+    dk = _rand((L, ndb, bt, KV, hd), dtype)
+    dv = _rand((L, ndb, bt, KV, hd), dtype)
+    slot = np.full(nb, -1, np.int32)
+    slot[RNG.choice(nb, ndb, replace=False)] = np.arange(ndb)
+    slot_map = jnp.asarray(RNG.permutation(nb + 2)[:nb], jnp.int32)
+    delta = jnp.asarray(RNG.integers(0, 64, (nb, bt)), jnp.int32)
+    pk = jnp.zeros((L, nb + 2, bt, KV, hd), dtype)
+    pv = jnp.zeros_like(pk)
+    gk, gv = fused_diff_restore_kernel(
+        mk, mv, dk, dv, jnp.asarray(slot), slot_map, delta, 1e4, pk, pv,
+        interpret=True)
+    ek, ev = ref.fused_diff_restore_ref(
+        mk, mv, dk, dv, jnp.asarray(slot), slot_map, delta, 1e4, pk, pv)
+    np.testing.assert_allclose(np.float32(gk), np.float32(ek), **_tol(dtype))
+    np.testing.assert_allclose(np.float32(gv), np.float32(ev), **_tol(dtype))
+
+
+def test_fused_diff_restore_no_diffs():
+    """All-clean mirror: restore must equal master (after RoPE recovery)."""
+    L, nb, bt, KV, hd = 2, 4, 32, 2, 32
+    mk = _rand((L, nb, bt, KV, hd), jnp.float32)
+    mv = _rand((L, nb, bt, KV, hd), jnp.float32)
+    slot = jnp.full((nb,), -1, jnp.int32)
+    slot_map = jnp.arange(nb, dtype=jnp.int32)
+    delta = jnp.zeros((nb, bt), jnp.int32)
+    pk = jnp.zeros((L, nb, bt, KV, hd))
+    out_k, out_v = ops.fused_diff_restore(
+        mk, mv, jnp.zeros((L, 0, bt, KV, hd)), jnp.zeros((L, 0, bt, KV, hd)),
+        slot, slot_map, delta, 1e4, pk, jnp.zeros_like(pk), use_kernel=True)
+    np.testing.assert_allclose(out_k, mk, atol=1e-5)
+    np.testing.assert_allclose(out_v, mv, atol=1e-5)
+
+
+def test_ops_dispatch_kernel_vs_ref_agree():
+    """The jit wrappers give the same answer with and without the kernel."""
+    S, KV, hd = 128, 2, 64
+    k = _rand((S, KV, hd), jnp.float32)
+    src = jnp.arange(S, dtype=jnp.int32)
+    tgt = src + 17
+    a = ops.rope_align(k, src, tgt, 1e4, use_kernel=True)
+    b = ops.rope_align(k, src, tgt, 1e4, use_kernel=False)
+    np.testing.assert_allclose(a, b, atol=1e-5)

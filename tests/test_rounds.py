@@ -1,0 +1,69 @@
+"""All-Gather round abstraction / trace generation tests."""
+import numpy as np
+
+from repro.core.rounds import AgentState, generate_trace, round_prompt
+from repro.core.segments import PRIVATE, SHARED, TASK
+
+
+def test_trace_deterministic():
+    a = generate_trace("generative_agents", 4, 3, 512, seed=9)
+    b = generate_trace("generative_agents", 4, 3, 512, seed=9)
+    for ra, rb in zip(a.rounds, b.rounds):
+        for x, y in zip(ra.shared_blocks, rb.shared_blocks):
+            np.testing.assert_array_equal(x, y)
+        for aid in a.agent_ids:
+            np.testing.assert_array_equal(ra.tasks[aid], rb.tasks[aid])
+    c = generate_trace("generative_agents", 4, 3, 512, seed=10)
+    assert not np.array_equal(a.init_histories["agent0"],
+                              c.init_histories["agent0"])
+
+
+def test_trace_workload_regimes():
+    ga = generate_trace("generative_agents", 2, 1, 512, seed=0,
+                        jitter_hist=False)
+    as_ = generate_trace("agent_society", 2, 1, 512, seed=0,
+                         jitter_hist=False)
+    # agent_society: longer private histories (paper §6.1)
+    assert (as_.init_histories["agent0"].shape[0]
+            > ga.init_histories["agent0"].shape[0])
+
+
+def test_round_prompt_structure_with_separators():
+    st = AgentState("a", np.arange(10, dtype=np.int32))
+    shared = [np.arange(5, dtype=np.int32), np.arange(7, dtype=np.int32)]
+    task = np.arange(3, dtype=np.int32)
+    lay = round_prompt(st, shared, task, sep_id=511)
+    kinds = [s.kind for s in lay.spans]
+    assert kinds == [PRIVATE, SHARED, SHARED, TASK]
+    # separators between adjacent blocks
+    assert int(np.sum(lay.tokens == 511)) == 3
+    # H_i || Π_i(O) || task ordering
+    np.testing.assert_array_equal(lay.tokens[:10], st.history)
+
+
+def test_round_prompt_block_aligned():
+    st = AgentState("a", np.arange(64, dtype=np.int32))
+    shared = [np.arange(32, dtype=np.int32), np.arange(40, dtype=np.int32)]
+    task = np.arange(3, dtype=np.int32)
+    lay = round_prompt(st, shared, task, sep_id=511, align_blocks=32)
+    assert lay.length % 32 == 0
+    for s in lay.spans:
+        assert s.start % 32 == 0 and s.end % 32 == 0
+    # no physical separators in aligned mode
+    assert all(s.start == p.end for p, s in zip(lay.spans, lay.spans[1:]))
+
+
+def test_layout_order_permutes_shared_blocks():
+    st = AgentState("a", np.arange(4, dtype=np.int32))
+    shared = [np.full(4, 7, np.int32), np.full(4, 9, np.int32)]
+    task = np.arange(2, dtype=np.int32)
+    l1 = round_prompt(st, shared, task, 511, layout_order=[0, 1])
+    l2 = round_prompt(st, shared, task, 511, layout_order=[1, 0])
+    assert l1.spans[1].sid == l2.spans[2].sid
+    assert l1.spans[2].sid == l2.spans[1].sid
+
+
+def test_histories_grow():
+    st = AgentState("a", np.arange(8, dtype=np.int32))
+    st.extend_history(np.arange(4, dtype=np.int32))
+    assert st.history.shape[0] == 12
