@@ -4,16 +4,24 @@ cache reuse, diff-aware Master-Mirror storage, and fused diff restore."""
 from repro.core.collector import CollectiveResult, KVCollector, ReusePlan, group_compatible
 from repro.core.diff_store import (
     BLOCK_TOKENS,
+    FamilyPack,
     MasterCache,
     MirrorDiff,
     MirrorHandle,
     build_mirror,
     build_round_family,
     compression_stats,
+    pack_family,
     similarity_master,
 )
 from repro.core.pic import PICResult, align_cached_keys, n_sel_for, pic_prefill
-from repro.core.restore import dense_restore, dense_restore_paged, fused_restore_paged
+from repro.core.restore import (
+    dense_restore,
+    dense_restore_paged,
+    fused_restore_family_paged,
+    fused_restore_family_shared,
+    fused_restore_paged,
+)
 from repro.core.rounds import AgentState, AllGatherTrace, Round, generate_trace, round_prompt
 from repro.core.segments import (
     PRIVATE,

@@ -83,6 +83,9 @@ class KVCollector:
         self.shard = shard or _noshard
         # jit caches keyed by (S, n_sel, share)
         self._jit_cache: dict = {}
+        # counted work: one unit per RoPE-align + selection pass launched.
+        # Wall-clock is CI-contention-flaky; tests assert on this instead.
+        self.align_passes = 0
 
     # ------------------------------------------------------------------
     def _runner(self, S: int, n_sel: int, share: bool, has_priv: bool):
@@ -113,6 +116,7 @@ class KVCollector:
     ) -> CollectiveResult:
         """One collective pass for the whole round group (T3 path, Fig. 7)."""
         N, S = tokens.shape
+        self.align_passes += 1
         args = priv if priv is not None else ()
         res = self._runner(S, n_sel, True, priv is not None)(
             self.params, tokens, cached_k, cached_v, src_pos, shared_mask,
@@ -140,6 +144,7 @@ class KVCollector:
         repeating RoPE alignment and important-position selection."""
         out = []
         run = self._runner(tokens.shape[1], n_sel, False, priv is not None)
+        self.align_passes += tokens.shape[0]
         for i in range(tokens.shape[0]):
             args = ()
             if priv is not None:

@@ -208,6 +208,82 @@ def build_round_family(
 
 
 # --------------------------------------------------------------------------
+# family packing for the batched restore kernel
+# --------------------------------------------------------------------------
+@dataclass
+class FamilyPack:
+    """Stacked per-family diff tensors consumed by the family-batched
+    restore kernel (kernels.diff_restore.fused_family_restore_kernel).
+
+    Ragged per-mirror diff counts are padded to the family max ``ndb``;
+    padded rows are never addressed because ``diff_slot`` only maps the
+    real rows (-1 elsewhere).
+    """
+
+    rids: List[str]          # mirror request ids, kernel row order
+    diff_k: jax.Array        # [M, L, ndb, bt, KV, hd]
+    diff_v: jax.Array
+    diff_slot: np.ndarray    # int32 [M, nb]: row into diff_*[m] or -1
+    delta_pos: np.ndarray    # int32 [M, nb, bt] RoPE recovery deltas
+    nb: int                  # blocks per mirror (padded seq / bt)
+    block_tokens: int
+    seq_len: int
+
+    @property
+    def n_mirrors(self) -> int:
+        return len(self.rids)
+
+    def nbytes(self) -> int:
+        data = 2 * self.diff_k.size * self.diff_k.dtype.itemsize
+        return data + self.diff_slot.nbytes + self.delta_pos.nbytes
+
+
+def pack_family(handles: Sequence[MirrorHandle]) -> FamilyPack:
+    """Stack a Master family's mirror diffs into the dense per-family
+    tensors the batched restore kernel consumes (one launch per family).
+
+    All handles must share the same Master and block size. Per-mirror
+    diff counts may be ragged; values are padded with zeros to the max.
+    """
+    assert handles, "empty family"
+    master = handles[0].master
+    bt = handles[0].diff.block_tokens
+    S = handles[0].diff.seq_len
+    for h in handles:
+        assert h.master is master or h.diff.master_rid == master.rid, \
+            "pack_family needs one shared Master"
+        assert h.diff.block_tokens == bt and h.diff.seq_len == S, \
+            "family mirrors must share block size and length"
+    nb = -(-S // bt)
+    Sp = nb * bt
+    L, _, KV, hd = master.k.shape
+    ndb = max(1, max(h.diff.n_blocks for h in handles))
+    M = len(handles)
+
+    slot = np.full((M, nb), -1, np.int32)
+    dpos = np.zeros((M, Sp), np.int32)
+    ks, vs = [], []
+    for m, h in enumerate(handles):
+        d = h.diff
+        slot[m, np.asarray(d.block_idx)] = np.arange(d.n_blocks)
+        delta = np.asarray(d.new_pos, np.int64) - np.asarray(d.old_pos,
+                                                             np.int64)
+        dpos[m, : delta.shape[0]] = delta.astype(np.int32)
+        pad = ndb - d.n_blocks
+        kv, vv = d.k_vals, d.v_vals
+        if pad:
+            kv = jnp.pad(kv, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+            vv = jnp.pad(vv, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        ks.append(kv)
+        vs.append(vv)
+    return FamilyPack(
+        rids=[h.diff.rid for h in handles],
+        diff_k=jnp.stack(ks), diff_v=jnp.stack(vs),
+        diff_slot=slot, delta_pos=dpos.reshape(M, nb, bt),
+        nb=nb, block_tokens=bt, seq_len=S)
+
+
+# --------------------------------------------------------------------------
 # fallback master selection (no reuse plan available, paper §5)
 # --------------------------------------------------------------------------
 def similarity_master(token_lists: Sequence[np.ndarray]) -> int:

@@ -1,21 +1,47 @@
 """Mirror restore paths (paper §4.4, Algorithm 1).
 
-Two implementations with identical semantics:
+Three implementations with identical semantics, increasing in how much
+work they amortize:
 
-* :func:`dense_restore` — the naive baseline: materialize a dense copy of
-  the Master, overwrite the differing blocks, then RoPE-recover positions.
-  An extra full write-then-read round trip for an object the system never
-  keeps.
-* :func:`fused_restore` — applies the block-sparse corrections inside the
-  layerwise transfer that already moves cached KV into paged memory (the
-  Pallas kernel in ``repro.kernels.diff_restore``; its grid pipeline plays
-  the role of the CUDA ping-pong buffers).
+* :func:`dense_restore` / :func:`dense_restore_paged` — the naive
+  baseline: materialize a dense copy of the Master, overwrite the
+  differing blocks, RoPE-recover positions, then scatter into paged
+  memory as a separate step. An extra full write-then-read round trip
+  for an object the system never keeps (Fig. 13 dashed lines).
+* :func:`fused_restore_paged` — per-mirror fused path: applies the
+  block-sparse corrections and the RoPE recovery inside the layerwise
+  transfer that already moves cached KV into paged memory (the Pallas
+  kernel in ``repro.kernels.diff_restore``; its grid pipeline plays the
+  role of the CUDA ping-pong buffers). A family of M mirrors still pays
+  M launches and streams every Master block M times.
+* :func:`fused_restore_family_paged` — family-batched fused path: ONE
+  kernel launch restores every mirror of a Master family. The kernel
+  grid is ``(L, nb, M)`` with the mirror index innermost, so each
+  Master block is streamed into VMEM once per (layer, block) and
+  corrected for all M consumers while resident — the cost of reusing a
+  shared block is paid once regardless of agent count (§4.2, §4.4).
+  Inputs are the stacked per-family tensors from
+  :func:`repro.core.diff_store.pack_family`.
 
-Both return the mirror's K/V laid out into destination pages through a
-slot map, so they drop into the engine's paged KV pool.
+:func:`fused_restore_family_shared` is the page-sharing mode of the
+family path for aligned frames (the in-family case the serving engine
+hits every round): mirrors' clean blocks alias the Master's pool pages,
+so one launch writes the Master's pages once plus each mirror's DIFF
+pages only — per-family work is ``nb + sum(ndiff_m)`` pages instead of
+``M * nb``, making total restore cost sublinear in family size. A
+per-mirror page table maps logical blocks to (shared master | private
+diff) pages.
+
+All paged paths lay the mirrors' K/V into destination pages through slot
+maps, so they drop into the engine's paged KV pool. Parity across the
+three paths (bit-for-bit on the oracle dispatch, interpret-mode for the
+kernels) is enforced by tests/test_restore_parity.py; the family-size
+cost sweep lives in benchmarks/restore.py (fig13 +
+experiments/bench/restore_family_sweep.json).
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -171,3 +197,151 @@ def fused_restore_paged(handle: MirrorHandle, theta: float,
         dp.reshape(nb, bt), theta,
         pool_k, pool_v, use_kernel=use_kernel)
     return new_k, new_v
+
+
+def fused_restore_family_paged(handles, theta: float,
+                               slot_maps: jax.Array, pool_k: jax.Array,
+                               pool_v: jax.Array,
+                               *, use_kernel: bool = True
+                               ) -> Tuple[jax.Array, jax.Array]:
+    """Family-batched Algorithm 1: restore EVERY mirror of one Master
+    family in a single kernel launch.
+
+    ``handles`` must share one Master; ``slot_maps`` is int32 [M, nb]
+    with disjoint destination pages per mirror. Returns the updated
+    (pool_k, pool_v). Semantically identical to calling
+    :func:`fused_restore_paged` once per handle, but each Master block
+    crosses HBM once instead of M times.
+    """
+    from repro.core.diff_store import pack_family
+    from repro.kernels import ops
+
+    assert handles, "empty family"
+    pack = pack_family(handles)
+    master = handles[0].master
+    bt, nb = pack.block_tokens, pack.nb
+    mk = _pad_to_blocks(master.k, bt)
+    mv = _pad_to_blocks(master.v, bt)
+    L, Sp, KV, hd = mk.shape
+    kb = mk.reshape(L, nb, bt, KV, hd)
+    vb = mv.reshape(L, nb, bt, KV, hd)
+    return ops.fused_family_restore(
+        kb, vb, pack.diff_k, pack.diff_v,
+        jnp.asarray(pack.diff_slot), jnp.asarray(slot_maps, jnp.int32),
+        jnp.asarray(pack.delta_pos), theta,
+        pool_k, pool_v, use_kernel=use_kernel)
+
+
+@jax.jit
+def _shared_scatter(master_kb, master_vb, diff_k, diff_v,
+                    master_map, diff_map, pool_k, pool_v):
+    """One-launch page write for the sharing mode: the Master's blocks
+    once + every mirror's diff rows. [L, nb, ...] master, [M, L, ndb, ...]
+    diffs, maps int32 [nb] / [M, ndb] (disjoint pages)."""
+    L, nb = master_kb.shape[:2]
+    pool_k = pool_k.at[:, master_map].set(master_kb)
+    pool_v = pool_v.at[:, master_map].set(master_vb)
+    M, _, ndb = diff_k.shape[:3]
+    if ndb:
+        dk = jnp.moveaxis(diff_k, 0, 1).reshape(
+            (L, M * ndb) + diff_k.shape[3:])
+        dv = jnp.moveaxis(diff_v, 0, 1).reshape(
+            (L, M * ndb) + diff_v.shape[3:])
+        pool_k = pool_k.at[:, diff_map.reshape(-1)].set(dk)
+        pool_v = pool_v.at[:, diff_map.reshape(-1)].set(dv)
+    return pool_k, pool_v
+
+
+@functools.partial(jax.jit, static_argnames=("n_pages",))
+def _shared_build(master_kb, master_vb, diff_k, diff_v,
+                  master_map, diff_map, *, n_pages: int):
+    """_shared_scatter into a pool created in-graph: XLA initializes the
+    output buffer directly instead of copying a caller-owned pool first
+    (the functional ``.at[].set`` on an input costs a full O(pool) copy,
+    which would negate the page sharing at large M)."""
+    L = master_kb.shape[0]
+    shape = (L, n_pages) + master_kb.shape[2:]
+    return _shared_scatter(master_kb, master_vb, diff_k, diff_v,
+                           master_map, diff_map,
+                           jnp.zeros(shape, master_kb.dtype),
+                           jnp.zeros(shape, master_vb.dtype))
+
+
+def family_pool_pages(handles) -> int:
+    """Pool pages the page-sharing restore needs with default maps:
+    ``nb`` Master pages + ``M * ndb`` diff pages (ndb = family max diff
+    count, min 1 — pack_family's padding rule)."""
+    nb = -(-handles[0].diff.seq_len // handles[0].diff.block_tokens)
+    ndb = max(1, max(h.diff.n_blocks for h in handles))
+    return nb + len(handles) * ndb
+
+
+def fused_restore_family_shared(handles, pool_k: Optional[jax.Array] = None,
+                                pool_v: Optional[jax.Array] = None, *,
+                                master_map=None, diff_maps=None):
+    """Page-sharing family restore for aligned frames (in-family mirrors).
+
+    Writes the Master's ``nb`` pages once and each mirror's diff rows to
+    private pages — ``nb + M*ndb`` page writes total instead of the
+    ``M*nb`` of the full-write paths, so restore cost is sublinear in
+    family size. Clean mirror blocks alias the Master's pages.
+
+    ``master_map``: int32 [nb] Master destination pages; ``diff_maps``:
+    int32 [M, ndb] private pages per (mirror, padded diff row), disjoint
+    from each other and from ``master_map`` (padded rows write zero
+    blocks to their — never referenced — pages). Defaults: pages
+    ``[0, nb)`` for the Master and ``[nb, nb + M*ndb)`` for the diffs.
+
+    Returns ``(pool_k, pool_v, page_idx)`` where ``page_idx`` int32
+    [M, nb] maps each mirror's logical block to its pool page; gathering
+    ``pool[:, page_idx[m]]`` materializes mirror m bit-for-bit.
+
+    Omit ``pool_k``/``pool_v`` to get a fresh pool sized
+    :func:`family_pool_pages` — callers must NOT re-derive the sizing
+    rule themselves (jit silently drops out-of-bounds scatters, so an
+    undersized pool corrupts restored KV without an error; a provided
+    pool is checked against the maps for exactly that reason).
+    """
+    from repro.core.diff_store import pack_family
+
+    assert handles, "empty family"
+    for h in handles:
+        assert np.array_equal(h.diff.old_pos, h.diff.new_pos), \
+            "page-sharing restore requires aligned frames"
+    pack = pack_family(handles)
+    master = handles[0].master
+    bt, nb = pack.block_tokens, pack.nb
+    M, ndb = pack.diff_slot.shape[0], pack.diff_k.shape[2]
+    mk = _pad_to_blocks(master.k, bt)
+    mv = _pad_to_blocks(master.v, bt)
+    L, Sp, KV, hd = mk.shape
+    if master_map is None:
+        master_map = np.arange(nb, dtype=np.int32)
+    if diff_maps is None:
+        diff_maps = (nb + np.arange(M * ndb, dtype=np.int32)
+                     ).reshape(M, ndb)
+    master_map = np.asarray(master_map, np.int32)
+    diff_maps = np.asarray(diff_maps, np.int32)
+    n_addr = int(max(master_map.max(), diff_maps.max())) + 1
+    if pool_k is None:
+        pool_k, pool_v = _shared_build(
+            mk.reshape(L, nb, bt, KV, hd), mv.reshape(L, nb, bt, KV, hd),
+            pack.diff_k, pack.diff_v,
+            jnp.asarray(master_map), jnp.asarray(diff_maps),
+            n_pages=n_addr)
+    else:
+        assert pool_k.shape[1] >= n_addr and pool_v.shape[1] >= n_addr, \
+            (pool_k.shape, pool_v.shape,
+             "pool smaller than the page maps address — "
+             "size it with family_pool_pages()")
+        pool_k, pool_v = _shared_scatter(
+            mk.reshape(L, nb, bt, KV, hd), mv.reshape(L, nb, bt, KV, hd),
+            pack.diff_k, pack.diff_v,
+            jnp.asarray(master_map), jnp.asarray(diff_maps),
+            pool_k, pool_v)
+    slot = pack.diff_slot                                    # [M, nb]
+    page_idx = np.where(
+        slot >= 0,
+        np.take_along_axis(diff_maps, np.maximum(slot, 0), axis=1),
+        master_map[None, :]).astype(np.int32)
+    return pool_k, pool_v, page_idx

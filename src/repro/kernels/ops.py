@@ -14,7 +14,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.block_diff import block_diff_kernel
-from repro.kernels.diff_restore import fused_diff_restore_kernel
+from repro.kernels.diff_restore import (
+    fused_diff_restore_kernel,
+    fused_family_restore_kernel,
+)
 from repro.kernels.flash_prefill import flash_prefill_kernel
 from repro.kernels.rope_align import rope_align_kernel
 
@@ -76,5 +79,32 @@ def fused_diff_restore(master_k, master_v, diff_k, diff_v, diff_slot,
             master_k, master_v, diff_k, diff_v, diff_slot, slot_map,
             delta_pos, theta, pool_k, pool_v)
     return fused_diff_restore_kernel(
+        master_k, master_v, diff_k, diff_v, diff_slot, slot_map,
+        delta_pos, theta, pool_k, pool_v, interpret=_interpret())
+
+
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("theta", "use_kernel"))
+def fused_family_restore(master_k, master_v, diff_k, diff_v, diff_slot,
+                         slot_map, delta_pos, theta: float,
+                         pool_k, pool_v, use_kernel: bool = True):
+    """Family-batched Algorithm 1: one launch restores every mirror of a
+    Master family; each Master block is streamed once and corrected for
+    all M consumers while resident.
+
+    master_k/v: [L, nb, bt, KV, hd]; diff_k/v: [M, L, ndb, bt, KV, hd];
+    diff_slot/slot_map: [M, nb] int32 (slot maps disjoint across mirrors);
+    delta_pos: [M, nb, bt] int32; pools: [L, n_pages, bt, KV, hd].
+    Returns updated pools.
+    """
+    if diff_k.shape[2] == 0:  # keep index maps total: pad one zero row
+        zshape = diff_k.shape[:2] + (1,) + diff_k.shape[3:]
+        diff_k = jnp.zeros(zshape, diff_k.dtype)
+        diff_v = jnp.zeros(zshape, diff_v.dtype)
+    if not use_kernel:
+        return ref.fused_family_restore_ref(
+            master_k, master_v, diff_k, diff_v, diff_slot, slot_map,
+            delta_pos, theta, pool_k, pool_v)
+    return fused_family_restore_kernel(
         master_k, master_v, diff_k, diff_v, diff_slot, slot_map,
         delta_pos, theta, pool_k, pool_v, interpret=_interpret())

@@ -43,6 +43,36 @@ def fused_diff_restore_ref(master_k, master_v, diff_k, diff_v, diff_slot,
     return pool_k, pool_v
 
 
+def fused_family_restore_ref(master_k, master_v, diff_k, diff_v, diff_slot,
+                             slot_map, delta_pos, theta, pool_k, pool_v):
+    """Oracle for the family-batched restore: ONE master, M mirrors.
+
+    master_k/v: [L, nb, bt, KV, hd]; diff_k/v: [M, L, ndb, bt, KV, hd];
+    diff_slot: [M, nb] (-1 = no diff); slot_map: [M, nb] dest pages
+    (disjoint across mirrors); delta_pos: [M, nb, bt];
+    pools: [L, n_pages, bt, KV, hd].
+    """
+    L, nb, bt, KV, hd = master_k.shape
+    M = diff_slot.shape[0]
+    have = (diff_slot >= 0)[:, None, :, None, None, None]   # [M,1,nb,1,1,1]
+    rows = jnp.maximum(diff_slot, 0)                        # [M, nb]
+    dk = jax.vmap(lambda d, r: d[:, r])(diff_k, rows)       # [M, L, nb, ...]
+    dv = jax.vmap(lambda d, r: d[:, r])(diff_v, rows)
+    k = jnp.where(have, dk, master_k[None])
+    v = jnp.where(have, dv, master_v[None])
+    k = rope_delta_ref(
+        k.reshape(M, L, nb * bt, KV, hd),
+        jnp.broadcast_to(delta_pos.reshape(M, 1, nb * bt), (M, L, nb * bt)),
+        theta).reshape(M, L, nb, bt, KV, hd)
+    # scatter every mirror's pages; slot maps are disjoint across mirrors
+    k_flat = jnp.moveaxis(k, 0, 1).reshape(L, M * nb, bt, KV, hd)
+    v_flat = jnp.moveaxis(v, 0, 1).reshape(L, M * nb, bt, KV, hd)
+    sm = slot_map.reshape(M * nb)
+    pool_k = pool_k.at[:, sm].set(k_flat)
+    pool_v = pool_v.at[:, sm].set(v_flat)
+    return pool_k, pool_v
+
+
 def rope_align_ref(k: jax.Array, src_pos: jax.Array, tgt_pos: jax.Array,
                    theta: float) -> jax.Array:
     """Oracle for kernels.rope_align: k [S, KV, hd], positions [S]."""

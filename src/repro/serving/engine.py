@@ -280,10 +280,17 @@ class MultiAgentEngine:
     def _restore_hist_entries(self, aids: list) -> None:
         """Rebuild each agent's history-segment cache from the compressed
         Master-Mirror state of the previous round plus its own output
-        segment (which doubles as the shared block it produced). All
-        mirrors are restored in ONE vectorized call (§Perf store-path
-        iteration) instead of a per-agent python loop."""
-        from repro.core.restore import dense_restore_batch
+        segment (which doubles as the shared block it produced). The whole
+        Master family is restored in ONE family-batched launch: in-family
+        mirrors share the Master's frame, so the page-sharing mode writes
+        the Master's pages once plus each mirror's diff pages only — the
+        restore cost of a shared block is paid once regardless of agent
+        count (§4.2, §4.4). The per-mirror gather that follows densifies
+        each history entry for the collector (which still consumes dense
+        caches), so end-to-end work here remains O(M*S); keeping the
+        entries paged through the collector is the follow-up that makes
+        the sharing end-to-end."""
+        from repro.core.restore import fused_restore_family_shared
 
         cfg = self.cfg
         pending = [a for a in aids
@@ -294,9 +301,17 @@ class MultiAgentEngine:
         mirrors = [a for a in pending if not self.sessions[a].is_master]
         restored = {}
         if mirrors:
-            ks, vs = dense_restore_batch(
-                [self.sessions[a].mirror for a in mirrors], cfg.rope_theta)
-            restored = {a: (ks[i], vs[i]) for i, a in enumerate(mirrors)}
+            handles = [self.sessions[a].mirror for a in mirrors]
+            bt = handles[0].diff.block_tokens
+            S = handles[0].diff.seq_len
+            nb = -(-S // bt)
+            L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+            pk_, pv_, page_idx = fused_restore_family_shared(handles)
+            for i, a in enumerate(mirrors):
+                pages = jnp.asarray(page_idx[i])
+                ks = pk_[:, pages].reshape(L, nb * bt, KV, hd)[:, :S]
+                vs = pv_[:, pages].reshape(L, nb * bt, KV, hd)[:, :S]
+                restored[a] = (ks, vs)
         for a in pending:
             s = self.sessions[a]
             span_len, out_sid = s.hist_pending          # set in _post_round
@@ -330,6 +345,7 @@ class MultiAgentEngine:
                 self.collector.collective_reuse(
                     aids, tokens, sk, sv, src, smask, n_sel, priv)
                 self._warm.add(key)
+            p0 = self.collector.align_passes
             t0 = time.perf_counter()
             res = self.collector.collective_reuse(
                 aids, tokens, sk, sv, src, smask, n_sel, priv)
@@ -338,7 +354,8 @@ class MultiAgentEngine:
             k = res.pic.recovered_k                        # [L, N, S, KV, hd]
             v = res.pic.recovered_v
             logits = res.pic.logits
-            info = {"n_sel": n_sel, "plan": res.plan}
+            info = {"n_sel": n_sel, "plan": res.plan,
+                    "align_passes": self.collector.align_passes - p0}
         else:
             key = ("serial", S, n_sel)
             if key not in self._warm:
@@ -347,6 +364,7 @@ class MultiAgentEngine:
                     None if priv is None else tuple(
                         x[:1] if i < 3 else x for i, x in enumerate(priv)))
                 self._warm.add(key)
+            p0 = self.collector.align_passes
             t0 = time.perf_counter()
             results = self.collector.serial_reuse(
                 aids, tokens, sk, sv, src, smask, n_sel, priv)
@@ -355,7 +373,8 @@ class MultiAgentEngine:
             k = jnp.concatenate([r.recovered_k for r in results], axis=1)
             v = jnp.concatenate([r.recovered_v for r in results], axis=1)
             logits = jnp.concatenate([r.logits for r in results], axis=0)
-            info = {"n_sel": n_sel}
+            info = {"n_sel": n_sel,
+                    "align_passes": self.collector.align_passes - p0}
         return logits, {"k": k, "v": v}, dt, info
 
     # ------------------------------------------------------------------

@@ -1,12 +1,28 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+Skipped wholesale when the hypothesis package is unavailable (this
+container does not ship it); tests/test_restore_parity.py carries
+seed-parametrized versions of the storage round-trip invariants so they
+stay exercised either way.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
-from repro.core.diff_store import MasterCache, build_mirror
-from repro.core.restore import dense_restore
+from repro.core.diff_store import (
+    MasterCache,
+    MirrorHandle,
+    build_mirror,
+    build_round_family,
+    compression_stats,
+    pack_family,
+)
+from repro.core.restore import dense_restore, fused_restore_family_shared
 from repro.core.segments import (
     PRIVATE,
     SHARED,
@@ -107,6 +123,83 @@ def test_mirror_roundtrip_random_blocks(data):
     rk, rv = dense_restore(MirrorHandle(master, diff), 1e4)
     np.testing.assert_array_equal(rk, xk)
     np.testing.assert_array_equal(rv, xv)
+
+
+@SETTINGS
+@given(st.data())
+def test_round_family_roundtrip(data):
+    """For ANY compatible round family, build_round_family → restore
+    reproduces every sibling cache exactly, through both the dense and
+    the family-batched (page-sharing) paths."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    N = data.draw(st.integers(2, 4))
+    nb = data.draw(st.integers(1, 4))
+    bt, KV, hd, L = 16, 2, 8, 2
+    S = nb * bt
+    base = rng.normal(size=(L, S, KV, hd)).astype(np.float32)
+    caches = []
+    for i in range(N):
+        x = base.copy()
+        # strict subset of touched blocks keeps diffs genuinely sparse
+        touched = data.draw(st.sets(st.integers(0, nb - 1), max_size=nb - 1))
+        for b in touched:
+            x[:, b * bt : (b + 1) * bt] += 0.1 * rng.normal(
+                size=(L, bt, KV, hd)).astype(np.float32)
+        caches.append(x)
+    ks = jnp.asarray(np.stack(caches))
+    vs = -ks
+    master_idx = data.draw(st.integers(0, N - 1))
+    master, handles = build_round_family(
+        [f"r{i}" for i in range(N)], ks, vs, np.arange(S), master_idx,
+        block_tokens=bt)
+    mirror_rows = [i for i in range(N) if i != master_idx]
+    for h, row in zip(handles, mirror_rows):
+        dk, dv = dense_restore(h, 1e4)
+        np.testing.assert_array_equal(np.asarray(dk), caches[row])
+        np.testing.assert_array_equal(np.asarray(dv), -caches[row])
+    if handles:
+        pk, pv, pages = fused_restore_family_shared(handles)
+        for m, row in enumerate(mirror_rows):
+            gk = pk[:, pages[m]].reshape(L, S, KV, hd)
+            np.testing.assert_array_equal(np.asarray(gk), caches[row])
+
+
+@SETTINGS
+@given(st.data())
+def test_family_accounting_consistent(data):
+    """compression_stats and nbytes stay self-consistent: stored bytes
+    add up, the family never stores more than N dense caches, and the
+    compression ratio clears 1 for sparse diffs."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    N = data.draw(st.integers(2, 4))
+    nb = data.draw(st.integers(2, 5))
+    bt, KV, hd, L = 16, 2, 8, 2
+    S = nb * bt
+    base = rng.normal(size=(L, S, KV, hd)).astype(np.float32)
+    caches = [base]
+    for i in range(N - 1):
+        x = base.copy()
+        touched = data.draw(st.sets(st.integers(0, nb - 1), max_size=nb - 1))
+        for b in touched:
+            x[:, b * bt : (b + 1) * bt] += 0.1 * rng.normal(
+                size=(L, bt, KV, hd)).astype(np.float32)
+        caches.append(x)
+    ks = jnp.asarray(np.stack(caches))
+    master, handles = build_round_family(
+        [f"r{i}" for i in range(N)], ks, ks, np.arange(S), 0,
+        block_tokens=bt)
+    stats = compression_stats(master, handles)
+    stored = master.nbytes() + sum(h.nbytes() for h in handles)
+    assert stats["stored_bytes"] == stored
+    assert stats["dense_bytes"] == N * master.nbytes()
+    assert stats["stored_bytes"] <= stats["dense_bytes"]
+    assert stats["compression_ratio"] >= 1.0
+    if handles:
+        assert stats["per_mirror_ratio"] >= 1.0
+        # the packed family is bounded by the mirrors' dense footprint
+        pack = pack_family(handles)
+        assert pack.nbytes() <= len(handles) * master.nbytes() + \
+            pack.diff_slot.nbytes + pack.delta_pos.nbytes
 
 
 # ----------------------------------------------------------------- KV pool

@@ -1,0 +1,271 @@
+"""Hardened restore parity suite (paper §4.4, Algorithm 1).
+
+The three restore paths must agree BIT-FOR-BIT on every family:
+
+  dense_restore_paged        — copy Master, overwrite, RoPE, scatter
+  fused_restore_paged        — per-mirror fused kernel/oracle
+  fused_restore_family_paged — ONE launch for the whole Master family
+
+plus the page-sharing mode (``fused_restore_family_shared``) for
+aligned frames. Kernels run in interpret mode on CPU (ops dispatches
+``interpret=True``); every path is evaluated under jit so XLA fuses the
+float ops identically — that is what makes bit-for-bit a fair contract
+rather than a tolerance test.
+
+Edge cases from the issue: mirror with zero diff blocks, mirror with
+every block diffed, M=1 family, ragged per-mirror diff counts, and
+nonzero ``delta_pos`` RoPE recovery. Plus: randomized families, ragged
+sequence tails, and Diff-Aware Storage round-trip/accounting invariants
+(non-hypothesis complement to tests/test_properties.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.diff_store import (
+    MasterCache,
+    MirrorDiff,
+    MirrorHandle,
+    build_round_family,
+    compression_stats,
+    pack_family,
+)
+from repro.core.restore import (
+    dense_restore,
+    dense_restore_paged,
+    family_pool_pages,
+    fused_restore_family_paged,
+    fused_restore_family_shared,
+    fused_restore_paged,
+)
+
+L, BT, KV, HD = 2, 16, 2, 32
+THETA = 1e4
+
+
+def make_family(rng, nb, counts, *, shifts=None, S=None):
+    """Master + one mirror per entry of ``counts`` (touched-block count);
+    ``shifts[m]`` nonzero gives that mirror a shifted position frame
+    (delta_pos RoPE recovery on restore)."""
+    S = S if S is not None else nb * BT
+    mk = jnp.asarray(rng.normal(size=(L, S, KV, HD)), jnp.float32)
+    mv = jnp.asarray(rng.normal(size=(L, S, KV, HD)), jnp.float32)
+    master = MasterCache("m", mk, mv, np.arange(S, dtype=np.int32))
+    handles = []
+    for m, n in enumerate(counts):
+        idx = np.sort(rng.choice(nb, n, replace=False)).astype(np.int32)
+        kv = jnp.asarray(rng.normal(size=(L, n, BT, KV, HD)), jnp.float32)
+        vv = jnp.asarray(rng.normal(size=(L, n, BT, KV, HD)), jnp.float32)
+        new_pos = np.arange(S, dtype=np.int32)
+        if shifts is not None and shifts[m]:
+            new_pos = new_pos + np.asarray(
+                rng.integers(1, shifts[m] + 1, S), np.int32)
+        d = MirrorDiff(f"x{m}", "m", idx, kv, vv,
+                       np.arange(S, dtype=np.int32), new_pos, S, BT)
+        handles.append(MirrorHandle(master, d))
+    return master, handles
+
+
+def run_all_paths(handles):
+    """Evaluate every restore path on the same family and pool."""
+    nb = -(-handles[0].diff.seq_len // BT)
+    M = len(handles)
+    n_pages = M * nb + 2
+    pool_k = jnp.zeros((L, n_pages, BT, KV, HD), jnp.float32)
+    pool_v = jnp.zeros_like(pool_k)
+    sms = np.arange(M * nb, dtype=np.int32).reshape(M, nb)
+    sms_j = jnp.asarray(sms)
+
+    out = {}
+    out["family_ref"] = fused_restore_family_paged(
+        handles, THETA, sms_j, pool_k, pool_v, use_kernel=False)
+    out["family_kernel"] = fused_restore_family_paged(
+        handles, THETA, sms_j, pool_k, pool_v, use_kernel=True)
+
+    for use_kernel, name in ((False, "mirror_ref"), (True, "mirror_kernel")):
+        pk, pv = pool_k, pool_v
+        for m, h in enumerate(handles):
+            pk, pv = fused_restore_paged(h, THETA, sms_j[m], pk, pv,
+                                         use_kernel=use_kernel)
+        out[name] = (pk, pv)
+
+    # dense baseline under jit — same compilation regime as the fused
+    # paths, so the RoPE float ops fuse identically (bit-for-bit).
+    def dense_all():
+        pk, pv = pool_k, pool_v
+        for m, h in enumerate(handles):
+            pk, pv = dense_restore_paged(h, THETA, sms_j[m], pk, pv)
+        return pk, pv
+
+    out["dense"] = jax.jit(dense_all)()
+    return out
+
+
+def assert_all_paths_equal(handles):
+    out = run_all_paths(handles)
+    ref = out.pop("family_ref")
+    for name, (pk, pv) in out.items():
+        np.testing.assert_array_equal(np.asarray(ref[0]), np.asarray(pk),
+                                      err_msg=f"K mismatch: {name}")
+        np.testing.assert_array_equal(np.asarray(ref[1]), np.asarray(pv),
+                                      err_msg=f"V mismatch: {name}")
+    return ref
+
+
+# ------------------------------------------------------------- randomized
+@pytest.mark.parametrize("seed", range(4))
+def test_randomized_family_parity(seed):
+    rng = np.random.default_rng(seed)
+    nb = int(rng.integers(2, 7))
+    M = int(rng.integers(1, 5))
+    counts = [int(rng.integers(0, nb + 1)) for _ in range(M)]
+    shifts = [int(rng.integers(0, 2)) * 13 for _ in range(M)]
+    _, handles = make_family(rng, nb, counts, shifts=shifts)
+    assert_all_paths_equal(handles)
+
+
+# -------------------------------------------------------------- edge cases
+def test_zero_diff_mirror():
+    """A mirror identical to its Master restores to the Master."""
+    rng = np.random.default_rng(10)
+    nb = 4
+    master, handles = make_family(rng, nb, [0, 2])
+    ref = assert_all_paths_equal(handles)
+    # the zero-diff mirror's pages ARE the master blocks
+    got = np.asarray(ref[0][:, :nb]).reshape(L, nb * BT, KV, HD)
+    np.testing.assert_array_equal(got, np.asarray(master.k))
+
+
+def test_every_block_diffed():
+    rng = np.random.default_rng(11)
+    nb = 5
+    _, handles = make_family(rng, nb, [nb])
+    ref = assert_all_paths_equal(handles)
+    got = np.asarray(ref[0][:, :nb]).reshape(L, nb * BT, KV, HD)
+    exp = np.asarray(handles[0].diff.k_vals).reshape(L, nb * BT, KV, HD)
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_single_mirror_family():
+    """M=1: the family launch degenerates to the per-mirror launch."""
+    rng = np.random.default_rng(12)
+    _, handles = make_family(rng, 6, [3])
+    assert_all_paths_equal(handles)
+
+
+def test_ragged_diff_counts():
+    """Ragged per-mirror counts exercise pack_family's padding: rows
+    beyond a mirror's real diffs must never leak into its pages."""
+    rng = np.random.default_rng(13)
+    nb = 6
+    _, handles = make_family(rng, nb, [0, 1, nb, 3])
+    assert_all_paths_equal(handles)
+    pack = pack_family(handles)
+    assert pack.diff_k.shape[:3] == (4, L, nb)
+    for m, h in enumerate(handles):
+        n = h.diff.n_blocks
+        assert (pack.diff_slot[m] >= 0).sum() == n
+        assert pack.diff_slot[m].max(initial=-1) < max(1, nb)
+
+
+def test_nonzero_delta_pos_rope_recovery():
+    """Cross-frame mirrors: restore must replay the RoPE rotation into
+    the mirror's frame, identically on every path."""
+    rng = np.random.default_rng(14)
+    nb = 4
+    S = nb * BT
+    _, handles = make_family(rng, nb, [2, 0], shifts=[9, 21])
+    ref = assert_all_paths_equal(handles)
+    # K planes actually moved (rotation is not the identity)…
+    dense_k, _ = dense_restore(handles[1], THETA)
+    base = np.asarray(handles[1].master.k)
+    assert np.abs(np.asarray(dense_k) - base).max() > 1e-3
+    # …and V planes never rotate
+    got_v = np.asarray(ref[1][:, nb : 2 * nb]).reshape(L, S, KV, HD)
+    np.testing.assert_array_equal(got_v, np.asarray(handles[1].master.v))
+
+
+def test_ragged_sequence_tail():
+    """seq_len not a block multiple: padded tail blocks restore too."""
+    rng = np.random.default_rng(15)
+    nb = 4
+    _, handles = make_family(rng, nb, [1, 3], S=nb * BT - 7)
+    assert_all_paths_equal(handles)
+
+
+# ------------------------------------------------------ page-sharing mode
+@pytest.mark.parametrize("counts", [[0, 2], [3, 3, 0], [4]])
+def test_shared_page_family_matches_dense(counts):
+    """Gathering a mirror through its page table == dense restore,
+    bit-for-bit (aligned frames)."""
+    rng = np.random.default_rng(16)
+    nb = 4
+    S = nb * BT - 3
+    _, handles = make_family(rng, nb, counts, S=S)
+    M = len(handles)
+    pool_k = jnp.zeros((L, family_pool_pages(handles), BT, KV, HD),
+                       jnp.float32)
+    pk, pv, page_idx = fused_restore_family_shared(
+        handles, pool_k, jnp.zeros_like(pool_k))
+    assert page_idx.shape == (M, nb)
+    for m, h in enumerate(handles):
+        gk = pk[:, page_idx[m]].reshape(L, nb * BT, KV, HD)[:, :S]
+        gv = pv[:, page_idx[m]].reshape(L, nb * BT, KV, HD)[:, :S]
+        dk, dv = dense_restore(h, THETA)
+        np.testing.assert_array_equal(np.asarray(gk), np.asarray(dk))
+        np.testing.assert_array_equal(np.asarray(gv), np.asarray(dv))
+
+
+def test_shared_page_rejects_unaligned():
+    rng = np.random.default_rng(17)
+    _, handles = make_family(rng, 4, [1], shifts=[5])
+    pool = jnp.zeros((L, 8, BT, KV, HD), jnp.float32)
+    with pytest.raises(AssertionError):
+        fused_restore_family_shared(handles, pool, pool)
+
+
+# ------------------------------------- diff-aware storage round-trip
+# (non-hypothesis complement to tests/test_properties.py, which is
+# skipped when the hypothesis package is unavailable)
+@pytest.mark.parametrize("seed", range(3))
+def test_round_family_roundtrip_and_accounting(seed):
+    """build_round_family → family restore reproduces every original
+    cache exactly; byte accounting is self-consistent."""
+    rng = np.random.default_rng(100 + seed)
+    N, nb = int(rng.integers(2, 5)), 4
+    S = nb * BT
+    base = rng.normal(size=(L, S, KV, HD)).astype(np.float32)
+    caches = []
+    for i in range(N):
+        x = base.copy()
+        for b in rng.choice(nb, int(rng.integers(0, nb)), replace=False):
+            x[:, b * BT : (b + 1) * BT] += 0.1 * rng.normal(
+                size=(L, BT, KV, HD)).astype(np.float32)
+        caches.append(x)
+    ks = jnp.asarray(np.stack(caches))
+    vs = jnp.asarray(np.stack(caches)[..., ::-1].copy())
+    master_idx = int(rng.integers(0, N))
+    rids = [f"r{i}" for i in range(N)]
+    master, handles = build_round_family(
+        rids, ks, vs, np.arange(S), master_idx, block_tokens=BT)
+
+    # restore every mirror through the family path and compare
+    mirror_rows = [i for i in range(N) if i != master_idx]
+    if handles:
+        pk, pv, page_idx = fused_restore_family_shared(handles)
+        for m, row in enumerate(mirror_rows):
+            gk = pk[:, page_idx[m]].reshape(L, S, KV, HD)
+            gv = pv[:, page_idx[m]].reshape(L, S, KV, HD)
+            np.testing.assert_array_equal(np.asarray(gk), np.asarray(ks[row]))
+            np.testing.assert_array_equal(np.asarray(gv), np.asarray(vs[row]))
+
+    stats = compression_stats(master, handles)
+    stored = master.nbytes() + sum(h.nbytes() for h in handles)
+    assert stats["stored_bytes"] == stored
+    assert stats["dense_bytes"] == N * master.nbytes()
+    # mirrors touch strict subsets of blocks, so the family stores fewer
+    # bytes than N dense caches and the ratio clears 1
+    assert stats["stored_bytes"] <= stats["dense_bytes"]
+    assert stats["compression_ratio"] >= 1.0
+    assert stats["avg_changed_blocks"] <= nb

@@ -76,13 +76,20 @@ def test_tokendance_compresses_storage(all_modes):
 
 
 def test_collective_is_faster_than_serial(all_modes):
-    """The collective pass must beat N serial PIC passes (wall time,
-    CPU). Uses the later rounds (reuse active)."""
+    """The collective pass does O(1) RoPE-align + selection passes per
+    round where serial PIC does N. Asserts on counted work (the
+    collector's align_passes ledger) — wall-clock on shared CI is
+    contention-flaky and proves nothing about the algorithm."""
     _, pic = all_modes["pic"]
     _, td = all_modes["tokendance"]
-    t_serial = sum(s.t_recover for s in pic[1:])
-    t_coll = sum(s.t_recover for s in td[1:])
-    assert t_coll < t_serial, (t_coll, t_serial)
+    # round 0 is a plain prefill for every mode; reuse starts at round 1
+    for s in pic[1:]:
+        assert s.reuse["align_passes"] == N_AGENTS, s.reuse
+    for s in td[1:]:
+        assert s.reuse["align_passes"] == 1, s.reuse
+    p_serial = sum(s.reuse["align_passes"] for s in pic[1:])
+    p_coll = sum(s.reuse["align_passes"] for s in td[1:])
+    assert p_coll < p_serial, (p_coll, p_serial)
 
 
 def test_round_latency_reported(all_modes):
