@@ -7,6 +7,12 @@ important-position selection for the whole group; only the per-position
 refresh remains request-specific. The reuse plan it emits (group
 membership, per-request deviations, Master choice) is the bridge into
 Diff-Aware Storage (§4.3).
+
+Private histories may arrive PAGED (:class:`PagedPrivate`): a
+family-shared page pool from the §4.4 restore plus per-request page
+tables, gathered inside the collector's jitted pass. That keeps the
+"shared block restored once" property alive through the consumer —
+no dense per-mirror cache is materialized between restore and reuse.
 """
 from __future__ import annotations
 
@@ -42,6 +48,91 @@ class CollectiveResult:
     pic: PICResult               # batched over the group
 
 
+@dataclass
+class PagedPrivate:
+    """Per-request private history handed to the collector in PAGED form.
+
+    This is the bridge that keeps §4.4's page sharing alive end-to-end:
+    the serving engine restores a Master family with
+    ``fused_restore_family_shared`` (Master pages written once, mirror
+    diff pages only) and hands the resulting pool + per-request page
+    tables straight to :meth:`KVCollector.collective_reuse`. The gather
+    from pages to the per-request layout happens INSIDE the collector's
+    jitted computation, so no dense ``[L, S, KV, hd]`` private cache is
+    ever materialized on the host per mirror.
+
+    Shape/dtype contracts (N requests, prompt length S):
+      pool_k/pool_v: float [L, P, bt, KV, hd] — family-shared page pools.
+      page_idx:      int32 [N, nbh] — request n's logical block b lives in
+                     pool page ``page_idx[n, b]``; covers the first
+                     ``span_len`` tokens (``nbh = ceil(span_len / bt)``).
+      tail_k/tail_v: optional float [N, L, T, KV, hd] — dense suffix
+                     placed right after the paged span (per-agent output
+                     blocks that have no pages yet). May be None (T=0).
+      src:           int32 [N, S] — absolute source positions of every
+                     cached value (identity outside the private span).
+      mask:          bool [S] — True on the private-history span
+                     ``[start, start + span_len + T)``.
+      start/span_len: static ints — placement of the paged span in the
+                     prompt. They key the collector's jit cache.
+    """
+
+    pool_k: jax.Array
+    pool_v: jax.Array
+    page_idx: jax.Array          # int32 [N, nbh]
+    src: jax.Array               # int32 [N, S]
+    mask: jax.Array              # bool [S]
+    start: int
+    span_len: int
+    tail_k: Optional[jax.Array] = None   # [N, L, T, KV, hd]
+    tail_v: Optional[jax.Array] = None
+
+    @property
+    def tail_len(self) -> int:
+        return 0 if self.tail_k is None else int(self.tail_k.shape[2])
+
+    @property
+    def n_requests(self) -> int:
+        return int(self.page_idx.shape[0])
+
+    def materialize(self, S: int) -> tuple:
+        """Dense parity oracle: ``(pk, pv, psrc, pmask)`` exactly as the
+        pre-paged collector consumed them ([N, L, S, KV, hd] etc.).
+        Used by :meth:`KVCollector.serial_reuse` (the per-request
+        baseline) and by parity tests; the collective fast path performs
+        the same gather inside jit instead."""
+        pk, pv = _densify_paged(
+            self.pool_k, self.pool_v, self.page_idx, self.tail_k,
+            self.tail_v, S=S, start=self.start, span_len=self.span_len)
+        return pk, pv, self.src, self.mask
+
+
+def _densify_paged(pool_k, pool_v, page_idx, tail_k, tail_v, *,
+                   S: int, start: int, span_len: int):
+    """Gather paged private histories into the dense per-request layout
+    ``[N, L, S, KV, hd]`` (zeros outside the private span). Pure data
+    movement — no arithmetic — so running it inside or outside jit gives
+    bit-identical values; the collective path runs it inside. The gather
+    itself is :func:`repro.core.restore.gather_pages`, vmapped over
+    requests — one definition of the page→dense layout for the fast path
+    and every oracle."""
+    from repro.core.restore import gather_pages
+
+    L, _, bt, KV, hd = pool_k.shape
+    N, nbh = page_idx.shape
+    gk, gv = jax.vmap(
+        lambda row: gather_pages(pool_k, pool_v, row, span_len))(page_idx)
+    pk = jnp.zeros((N, L, S, KV, hd), pool_k.dtype)
+    pv = jnp.zeros((N, L, S, KV, hd), pool_v.dtype)
+    pk = pk.at[:, :, start : start + span_len].set(gk)
+    pv = pv.at[:, :, start : start + span_len].set(gv)
+    if tail_k is not None:
+        T = tail_k.shape[2]
+        pk = pk.at[:, :, start + span_len : start + span_len + T].set(tail_k)
+        pv = pv.at[:, :, start + span_len : start + span_len + T].set(tail_v)
+    return pk, pv
+
+
 @dataclass(frozen=True)
 class GroupKey:
     """Compatibility key: same active prompt length + same cached-span
@@ -68,7 +159,22 @@ def group_compatible(
 
 
 class KVCollector:
-    """Drives collective (or serial baseline) PIC recovery for round groups."""
+    """Drives collective (or serial baseline) PIC recovery for round groups.
+
+    Public API: :meth:`collective_reuse` (one shared pass per group, the
+    paper's T3 path) and :meth:`serial_reuse` (N per-request passes, the
+    T2 baseline). Both accept private histories either pre-densified or
+    as a :class:`PagedPrivate` page-pool reference; in the collective
+    case the page gather is part of the jitted recovery computation.
+
+    Constructor knobs: ``check_layer`` (deviation-measurement layer),
+    ``recompute_ratio`` (fraction of cached positions recomputed),
+    ``block_select`` (>0 selects whole token blocks of that size —
+    the TPU tile-aligned variant that keeps Mirror diffs block-sparse),
+    ``pooled_selection`` (one pooled selected set per group — a
+    beyond-paper option, off by default), ``shard`` (layer-output
+    sharding hook for the multi-device path).
+    """
 
     def __init__(self, params: dict, cfg: ModelConfig, *, check_layer: int = 1,
                  recompute_ratio: float = 0.15, block_select: int = 0,
@@ -88,11 +194,34 @@ class KVCollector:
         self.align_passes = 0
 
     # ------------------------------------------------------------------
-    def _runner(self, S: int, n_sel: int, share: bool, has_priv: bool):
-        key = (S, n_sel, share, has_priv)
+    def _runner(self, S: int, n_sel: int, share: bool, priv_mode: str,
+                paged_meta: tuple = ()):
+        """Jitted recovery pass for one (shape, mode) signature.
+
+        ``priv_mode`` is one of:
+          "none"  — no private caches
+          "dense" — trailing args (pk [N,L,S,KV,hd], pv, psrc [N,S],
+                    pmask [S]) as pre-densified tensors
+          "paged" — trailing args (pool_k [L,P,bt,KV,hd], pool_v,
+                    page_idx [N,nbh], tail_k, tail_v, psrc, pmask); the
+                    page gather runs INSIDE the jitted computation
+                    (``paged_meta = (start, span_len, has_tail)`` are the
+                    static placement params)
+        """
+        key = (S, n_sel, share, priv_mode, paged_meta)
         if key not in self._jit_cache:
-            def run(params, tokens, ck, cv, src, shared_mask,
-                    pk=None, pv=None, psrc=None, pmask=None):
+            def run(params, tokens, ck, cv, src, shared_mask, *args):
+                pk = pv = psrc = pmask = None
+                if priv_mode == "dense":
+                    pk, pv, psrc, pmask = args
+                elif priv_mode == "paged":
+                    start, span_len, has_tail = paged_meta
+                    pool_k, pool_v, page_idx = args[:3]
+                    tail_k, tail_v = args[3:5] if has_tail else (None, None)
+                    psrc, pmask = args[5:] if has_tail else args[3:]
+                    pk, pv = _densify_paged(
+                        pool_k, pool_v, page_idx, tail_k, tail_v,
+                        S=tokens.shape[1], start=start, span_len=span_len)
                 return pic_prefill(
                     params, self.cfg, tokens, ck, cv, src, shared_mask,
                     n_sel, priv_k=pk, priv_v=pv, priv_src=psrc,
@@ -101,6 +230,21 @@ class KVCollector:
                     block_select=self.block_select, shard=self.shard)
             self._jit_cache[key] = jax.jit(run)
         return self._jit_cache[key]
+
+    @staticmethod
+    def _priv_args(priv) -> Tuple[str, tuple, tuple]:
+        """(priv_mode, runner args, static paged_meta) for a ``priv`` that
+        is None, a dense tuple, or a :class:`PagedPrivate`."""
+        if priv is None:
+            return "none", (), ()
+        if isinstance(priv, PagedPrivate):
+            has_tail = priv.tail_k is not None
+            args = (priv.pool_k, priv.pool_v, priv.page_idx)
+            if has_tail:
+                args += (priv.tail_k, priv.tail_v)
+            args += (priv.src, priv.mask)
+            return "paged", args, (priv.start, priv.span_len, has_tail)
+        return "dense", tuple(priv), ()
 
     # ------------------------------------------------------------------
     def collective_reuse(
@@ -112,13 +256,44 @@ class KVCollector:
         src_pos: jax.Array,         # [S]
         shared_mask: jax.Array,     # [S]
         n_sel: int,
-        priv: Optional[tuple] = None,  # (pk [N,L,S,KV,hd], pv, psrc [N,S], pmask [S])
+        priv=None,
     ) -> CollectiveResult:
-        """One collective pass for the whole round group (T3 path, Fig. 7)."""
+        """One collective recovery pass for the whole round group (the T3
+        path of Fig. 7): ONE RoPE alignment of the group-shared blocks and
+        ONE batched important-position selection, instead of N per-request
+        passes.
+
+        Shape/dtype contracts (N requests, prompt length S, model dims
+        L layers × KV kv-heads × hd head-dim):
+          tokens:      int32 [N, S] — the group's (equal-length) prompts.
+          cached_k/v:  float [L, S, KV, hd] — group-SHARED cached KV laid
+                       out at prompt positions; zeros where uncached.
+          src_pos:     int32 [S] — source positions the shared values were
+                       computed at (identity where uncached).
+          shared_mask: bool [S] — True on shared-cached positions.
+          n_sel:       static int — recomputed-position budget (tokens);
+                       must be a multiple of ``block_select`` when block
+                       selection is on (see ``pic.n_sel_for_blocks``).
+          priv:        per-request private caches, one of
+                         * None — no private history,
+                         * dense tuple ``(pk [N,L,S,KV,hd], pv,
+                           psrc [N,S], pmask [S])``,
+                         * :class:`PagedPrivate` — pool + page tables;
+                           the gather happens inside the jitted pass, so
+                           callers never densify per request (§4.4 page
+                           sharing survives into the consumer).
+
+        Returns a :class:`CollectiveResult` whose ``pic`` holds the
+        recovered caches ``[L, N, S, KV, hd]`` and last-token logits, and
+        whose ``plan`` carries the Master choice + per-request deviations
+        into Diff-Aware Storage. Outputs are bit-identical across the
+        dense and paged ``priv`` forms (pure data movement either way)
+        and to per-request :meth:`serial_reuse` (paper §6.6).
+        """
         N, S = tokens.shape
         self.align_passes += 1
-        args = priv if priv is not None else ()
-        res = self._runner(S, n_sel, True, priv is not None)(
+        priv_mode, args, paged_meta = self._priv_args(priv)
+        res = self._runner(S, n_sel, True, priv_mode, paged_meta)(
             self.params, tokens, cached_k, cached_v, src_pos, shared_mask,
             *args)
         dev = np.asarray(jnp.sum(
@@ -138,12 +313,21 @@ class KVCollector:
         src_pos: jax.Array,
         shared_mask: jax.Array,
         n_sel: int,
-        priv: Optional[tuple] = None,
+        priv=None,
     ) -> List[PICResult]:
         """Per-request baseline (T2 path): N independent reuse passes, each
-        repeating RoPE alignment and important-position selection."""
+        repeating RoPE alignment and important-position selection.
+
+        Same contracts as :meth:`collective_reuse`; returns one
+        :class:`PICResult` per request (each with B=1 leading axes). A
+        :class:`PagedPrivate` ``priv`` is densified up front via its
+        oracle — the baseline deliberately pays the full per-request
+        materialization the collective paged path avoids."""
+        if isinstance(priv, PagedPrivate):
+            priv = priv.materialize(tokens.shape[1])
         out = []
-        run = self._runner(tokens.shape[1], n_sel, False, priv is not None)
+        run = self._runner(tokens.shape[1], n_sel, False,
+                           "none" if priv is None else "dense")
         self.align_passes += tokens.shape[0]
         for i in range(tokens.shape[0]):
             args = ()

@@ -52,6 +52,26 @@ from repro.core.diff_store import MirrorHandle, _pad_to_blocks
 from repro.models.layers import rope_shift
 
 
+def gather_pages(pool_k: jax.Array, pool_v: jax.Array, page_idx,
+                 seq_len: int) -> Tuple[jax.Array, jax.Array]:
+    """Materialize one paged entry: gather ``page_idx`` ([nbh] int32) out
+    of the pools ([L, P, bt, KV, hd]) into dense (k, v) of shape
+    [L, seq_len, KV, hd].
+
+    THE definition of the page→dense layout: every consumer of a page
+    table (``PagedSegmentCacheEntry.materialize``, the engine's dense
+    oracle branch, and — vmapped inside jit — the collector's
+    ``_densify_paged``) goes through this function, so the paged fast
+    path and the parity oracles cannot drift apart.
+    """
+    L, _, bt, KV, hd = pool_k.shape
+    nbh = int(page_idx.shape[0])
+    pages = jnp.asarray(page_idx)
+    k = pool_k[:, pages].reshape(L, nbh * bt, KV, hd)[:, :seq_len]
+    v = pool_v[:, pages].reshape(L, nbh * bt, KV, hd)[:, :seq_len]
+    return k, v
+
+
 def _delta_pos(diff) -> Optional[jax.Array]:
     old = np.asarray(diff.old_pos)
     new = np.asarray(diff.new_pos)
@@ -294,7 +314,11 @@ def fused_restore_family_shared(handles, pool_k: Optional[jax.Array] = None,
 
     Returns ``(pool_k, pool_v, page_idx)`` where ``page_idx`` int32
     [M, nb] maps each mirror's logical block to its pool page; gathering
-    ``pool[:, page_idx[m]]`` materializes mirror m bit-for-bit.
+    ``pool[:, page_idx[m]]`` materializes mirror m bit-for-bit. Callers
+    should NOT perform that gather on the host: the serving engine hands
+    (pool, page_idx) straight to ``KVCollector.collective_reuse`` (as a
+    ``PagedPrivate``), which gathers inside its jitted recovery pass —
+    that is what keeps the page sharing end-to-end (§4.2 through §4.4).
 
     Omit ``pool_k``/``pool_v`` to get a fresh pool sized
     :func:`family_pool_pages` — callers must NOT re-derive the sizing

@@ -150,6 +150,77 @@ class SegmentCacheEntry:
         return int(np.prod(self.k.shape)) * self.k.dtype.itemsize * 2
 
 
+@dataclass
+class PagedSegmentCacheEntry:
+    """Cached KV for one content segment, kept PAGED (paper §4.4 end-to-end).
+
+    Instead of owning a dense ``[L, S_seg, KV, hd]`` tensor, the entry
+    references a shared page pool (typically the output of
+    ``repro.core.restore.fused_restore_family_shared``, where in-family
+    mirrors alias the Master's pages) through a per-entry page table.
+    ``KVCollector.collective_reuse`` consumes the pool + ``page_idx``
+    directly, so the dense segment is never materialized on the host —
+    the restore cost of a shared block stays paid once regardless of how
+    many agents reference it.
+
+    Fields:
+      pool_k/pool_v: [L, P, bt, KV, hd] shared page pools (one object per
+        Master family; entries of one family alias the same arrays).
+      page_idx:      int32 [nbh] logical block -> pool page for THIS
+        entry's first ``seq_len`` tokens (``nbh = ceil(seq_len / bt)``).
+      tail_k/tail_v: optional dense [L, T, KV, hd] suffix appended after
+        the paged span (the agent's own freshly-decoded output block —
+        irreducible new content that has no pages yet).
+      src_pos:       int32 [seq_len + T] absolute source positions for
+        RoPE realignment, covering the paged span then the tail.
+    """
+
+    sid: str
+    pool_k: object            # jax array [L, P, bt, KV, hd]
+    pool_v: object
+    page_idx: np.ndarray      # int32 [nbh]
+    src_pos: np.ndarray       # int32 [seq_len + tail_len]
+    seq_len: int              # tokens gathered from pages
+    block_tokens: int
+    tail_k: object = None     # jax array [L, T, KV, hd] or None
+    tail_v: object = None
+    producer: str = ""
+    round_idx: int = -1
+
+    @property
+    def tail_len(self) -> int:
+        return 0 if self.tail_k is None else int(self.tail_k.shape[1])
+
+    @property
+    def length(self) -> int:
+        return self.seq_len + self.tail_len
+
+    def materialize(self) -> SegmentCacheEntry:
+        """Dense parity oracle: gather the pages (host-side) into the
+        equivalent :class:`SegmentCacheEntry`. Tests and the dense
+        fallback path use this; the serving fast path must not."""
+        import jax.numpy as jnp
+
+        from repro.core.restore import gather_pages
+
+        k, v = gather_pages(self.pool_k, self.pool_v, self.page_idx,
+                            self.seq_len)
+        if self.tail_k is not None:
+            k = jnp.concatenate([k, self.tail_k], axis=1)
+            v = jnp.concatenate([v, self.tail_v], axis=1)
+        return SegmentCacheEntry(
+            sid=self.sid, k=k, v=v, src_pos=self.src_pos,
+            producer=self.producer, round_idx=self.round_idx)
+
+    def nbytes(self) -> int:
+        """Bytes attributable to THIS entry: its page table + dense tail.
+        The pool itself is family-shared and accounted once by its owner
+        (``PagedKVPool`` ledger key ``restore:family``)."""
+        tail = (2 * int(np.prod(self.tail_k.shape)) * self.tail_k.dtype.itemsize
+                if self.tail_k is not None else 0)
+        return int(self.page_idx.nbytes) + tail
+
+
 class SegmentIndex:
     """Segment-based hash table replacing fixed-size chunk hashing.
 

@@ -30,10 +30,10 @@ from repro.core.diff_store import (
     compression_stats,
 )
 from repro.core.pic import n_sel_for_blocks
-from repro.core.restore import dense_restore
 from repro.core.rounds import AllGatherTrace, Round, round_prompt
 from repro.core.segments import (
     SHARED,
+    PagedSegmentCacheEntry,
     PromptLayout,
     SegmentCacheEntry,
     SegmentIndex,
@@ -75,8 +75,9 @@ class Session:
     dense_k: Optional[jax.Array] = None       # [L, S, KV, hd]
     dense_v: Optional[jax.Array] = None
     prompt_tokens: Optional[np.ndarray] = None
-    # pic / tokendance: history segment cache
-    hist_entry: Optional[SegmentCacheEntry] = None
+    # pic / tokendance: history segment cache (dense, or paged when the
+    # engine keeps restored families paged end-to-end)
+    hist_entry: Optional[object] = None   # SegmentCacheEntry | PagedSegmentCacheEntry
     # tokendance: compressed persistent state
     mirror: Optional[MirrorHandle] = None
     is_master: bool = False
@@ -102,7 +103,16 @@ class MultiAgentEngine:
         check_layer: int = 1,
         pool_pages: int = 1 << 16,
         keep_recovered: bool = False,
+        paged_history: bool = True,
     ):
+        """``paged_history`` (tokendance only): keep restored mirror
+        histories PAGED through the collector — the family restore's page
+        pool + per-agent page tables flow into ``collective_reuse`` and
+        the gather happens inside the recovery jit, so no dense per-mirror
+        cache is materialized between restore and reuse. ``False`` selects
+        the dense oracle path (per-mirror host gather), kept for parity
+        testing and as the reference the paged path must match
+        bit-for-bit."""
         assert mode in MODES, mode
         if mode in ("pic", "tokendance") and (not cfg.has_attention or cfg.has_ssm):
             # PIC-style reuse is inapplicable to SSM/hybrid state
@@ -130,7 +140,9 @@ class MultiAgentEngine:
         self.round_idx = 0
         self.last_outputs: Dict[str, np.ndarray] = {}
         self.td_master: Optional[MasterCache] = None
+        self.paged_history = paged_history
         self._t_restore = 0.0
+        self._restore_info: Optional[dict] = None
 
     # ------------------------------------------------------------------
     def init_agents(self, trace: AllGatherTrace) -> None:
@@ -250,32 +262,76 @@ class MultiAgentEngine:
             self._restore_hist_entries(aids)
             self._t_restore = time.perf_counter() - t0
 
-        # per-agent history caches (span 0 = private history)
+        # per-agent history caches (span 0 = private history). Entries are
+        # either dense SegmentCacheEntry (pic mode / dense oracle) or
+        # PagedSegmentCacheEntry referencing the family restore's page
+        # pool — the latter flow to the collector WITHOUT densification.
         hspan = layouts[0].spans[0]
         priv_mask = np.zeros(S, bool)
-        pk = pv = psrc = None
-        have_hist = all(self.sessions[a].hist_entry is not None for a in aids)
-        if have_hist and hspan.end > hspan.start:
+        priv = None
+        entries = [self.sessions[a].hist_entry for a in aids]
+        if all(e is not None for e in entries) and hspan.end > hspan.start:
             priv_mask[hspan.start : hspan.end] = True
-            pks, pvs, srcs = [], [], []
-            for a in aids:
-                e = self.sessions[a].hist_entry
-                assert e.k.shape[1] == len(hspan), (e.k.shape, len(hspan))
-                full_k = jnp.zeros((L, S, KV, hd), jnp.float32)
-                full_v = jnp.zeros_like(full_k)
-                full_k = full_k.at[:, hspan.start : hspan.end].set(e.k)
-                full_v = full_v.at[:, hspan.start : hspan.end].set(e.v)
-                s_ = np.arange(S, dtype=np.int32)
-                s_[hspan.start : hspan.end] = e.src_pos
-                pks.append(full_k)
-                pvs.append(full_v)
-                srcs.append(s_)
-            pk = jnp.stack(pks)
-            pv = jnp.stack(pvs)
-            psrc = jnp.asarray(np.stack(srcs))
+            paged = [isinstance(e, PagedSegmentCacheEntry) for e in entries]
+            if all(paged) and all(e.pool_k is entries[0].pool_k
+                                  for e in entries):
+                priv = self._paged_priv(entries, hspan, S, priv_mask)
+            else:
+                if any(paged):   # mixed family: fall back to the oracle
+                    entries = [e.materialize() if isinstance(
+                        e, PagedSegmentCacheEntry) else e for e in entries]
+                priv = self._dense_priv(entries, hspan, S, priv_mask)
         is_cached = shared_mask | priv_mask
         return (shared_k, shared_v, jnp.asarray(src), jnp.asarray(shared_mask),
-                pk, pv, psrc, jnp.asarray(priv_mask), is_cached)
+                priv, jnp.asarray(priv_mask), is_cached)
+
+    def _dense_priv(self, entries, hspan, S: int, priv_mask) -> tuple:
+        """Pre-densified private caches: the collector's dense ``priv``
+        tuple ``(pk [N,L,S,KV,hd], pv, psrc [N,S], pmask [S])``."""
+        cfg = self.cfg
+        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+        pks, pvs, srcs = [], [], []
+        for e in entries:
+            assert e.k.shape[1] == len(hspan), (e.k.shape, len(hspan))
+            full_k = jnp.zeros((L, S, KV, hd), jnp.float32)
+            full_v = jnp.zeros_like(full_k)
+            full_k = full_k.at[:, hspan.start : hspan.end].set(e.k)
+            full_v = full_v.at[:, hspan.start : hspan.end].set(e.v)
+            s_ = np.arange(S, dtype=np.int32)
+            s_[hspan.start : hspan.end] = e.src_pos
+            pks.append(full_k)
+            pvs.append(full_v)
+            srcs.append(s_)
+        return (jnp.stack(pks), jnp.stack(pvs),
+                jnp.asarray(np.stack(srcs)), jnp.asarray(priv_mask))
+
+    def _paged_priv(self, entries, hspan, S: int, priv_mask):
+        """Paged private caches: ONE family page pool + per-agent page
+        tables (plus each agent's dense output tail), gathered inside the
+        collector's jitted pass instead of here."""
+        from repro.core.collector import PagedPrivate
+
+        e0 = entries[0]
+        span_len, T = e0.seq_len, e0.tail_len
+        assert span_len + T == len(hspan), (span_len, T, len(hspan))
+        for e in entries:
+            assert e.seq_len == span_len and e.tail_len == T, \
+                "family entries must share the span layout"
+        rows = np.stack([np.asarray(e.page_idx) for e in entries])
+        srcs = []
+        for e in entries:
+            s_ = np.arange(S, dtype=np.int32)
+            s_[hspan.start : hspan.end] = e.src_pos
+            srcs.append(s_)
+        tail_k = tail_v = None
+        if T:
+            tail_k = jnp.stack([e.tail_k for e in entries])
+            tail_v = jnp.stack([e.tail_v for e in entries])
+        return PagedPrivate(
+            pool_k=e0.pool_k, pool_v=e0.pool_v,
+            page_idx=jnp.asarray(rows), src=jnp.asarray(np.stack(srcs)),
+            mask=jnp.asarray(priv_mask), start=hspan.start,
+            span_len=span_len, tail_k=tail_k, tail_v=tail_v)
 
     def _restore_hist_entries(self, aids: list) -> None:
         """Rebuild each agent's history-segment cache from the compressed
@@ -285,36 +341,125 @@ class MultiAgentEngine:
         mirrors share the Master's frame, so the page-sharing mode writes
         the Master's pages once plus each mirror's diff pages only — the
         restore cost of a shared block is paid once regardless of agent
-        count (§4.2, §4.4). The per-mirror gather that follows densifies
-        each history entry for the collector (which still consumes dense
-        caches), so end-to-end work here remains O(M*S); keeping the
-        entries paged through the collector is the follow-up that makes
-        the sharing end-to-end."""
-        from repro.core.restore import fused_restore_family_shared
+        count (§4.2, §4.4).
 
-        cfg = self.cfg
+        Default (``paged_history``): the entries stay PAGED — each agent
+        gets a :class:`PagedSegmentCacheEntry` referencing the family's
+        shared page pool through its page table, and the collector
+        gathers pages inside its jitted pass, so per-mirror work stays
+        O(ndb) end-to-end instead of O(S). The dense branch below is the
+        parity oracle (one host gather per mirror, O(M*S))."""
         pending = [a for a in aids
                    if self.sessions[a].hist_entry is None
                    and self.sessions[a].hist_pending is not None]
         if not pending:
             return
         mirrors = [a for a in pending if not self.sessions[a].is_master]
-        restored = {}
+        # equal-length prompts give every family member the same span
+        span_len = self.sessions[pending[0]].hist_pending[0]
+        assert all(self.sessions[a].hist_pending[0] == span_len
+                   for a in pending)
+        if self.paged_history:
+            self._restore_paged(pending, mirrors, span_len)
+        else:
+            self._restore_dense(pending, mirrors, span_len)
+
+    def _restore_paged(self, pending: list, mirrors: list,
+                       span_len: int) -> None:
+        """One page-sharing family launch; entries reference the pool.
+        The family is first TRIMMED to the history span — restore covers
+        only the blocks recovery will read, so the pool holds
+        ``nbh + M*ndb_h`` pages independent of the rest of the previous
+        prompt."""
+        from repro.core.diff_store import _pad_to_blocks, trim_family
+        from repro.core.restore import fused_restore_family_shared
+
+        cfg = self.cfg
+        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
         if mirrors:
-            handles = [self.sessions[a].mirror for a in mirrors]
+            handles = trim_family(
+                [self.sessions[a].mirror for a in mirrors], span_len)
             bt = handles[0].diff.block_tokens
-            S = handles[0].diff.seq_len
-            nb = -(-S // bt)
-            L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
-            pk_, pv_, page_idx = fused_restore_family_shared(handles)
-            for i, a in enumerate(mirrors):
-                pages = jnp.asarray(page_idx[i])
-                ks = pk_[:, pages].reshape(L, nb * bt, KV, hd)[:, :S]
-                vs = pv_[:, pages].reshape(L, nb * bt, KV, hd)[:, :S]
-                restored[a] = (ks, vs)
+            pool_k, pool_v, page_idx = fused_restore_family_shared(handles)
+        else:
+            # single-agent family: the pool is just the Master's blocks
+            bt = self.block_select or 32
+            mk = _pad_to_blocks(self.td_master.k[:, :span_len], bt)
+            mv = _pad_to_blocks(self.td_master.v[:, :span_len], bt)
+            nb_ = mk.shape[1] // bt
+            pool_k = mk.reshape(L, nb_, bt, KV, hd)
+            pool_v = mv.reshape(L, nb_, bt, KV, hd)
+            page_idx = np.zeros((0, nb_), np.int32)
+        nb = -(-span_len // bt)
+        master_row = np.arange(nb, dtype=np.int32)
+        mirror_row = {a: i for i, a in enumerate(mirrors)}
+        entry_bytes = 0
+        dense_equiv = 0
         for a in pending:
             s = self.sessions[a]
-            span_len, out_sid = s.hist_pending          # set in _post_round
+            span_len, out_sid = s.hist_pending        # set in _post_round
+            row = (master_row if s.is_master
+                   else page_idx[mirror_row[a]])
+            nbh = -(-span_len // bt)
+            out_e = self.segment_index.get(out_sid)
+            sp = np.concatenate([np.arange(span_len, dtype=np.int32),
+                                 out_e.src_pos])
+            s.hist_entry = PagedSegmentCacheEntry(
+                sid=f"hist:{a}:{self.round_idx}", pool_k=pool_k,
+                pool_v=pool_v, page_idx=np.asarray(row[:nbh], np.int32),
+                src_pos=sp, seq_len=span_len, block_tokens=bt,
+                tail_k=out_e.k, tail_v=out_e.v,
+                producer=a, round_idx=self.round_idx)
+            entry_bytes += s.hist_entry.nbytes()
+            dense_equiv += 2 * L * (span_len + out_e.k.shape[1]) * KV * hd \
+                * pool_k.dtype.itemsize
+        # ledger: the family's shared pages are accounted ONCE, not once
+        # per mirror — this is the accounting face of §4.4's page sharing
+        n_pool = int(pool_k.shape[1])
+        self.pool.free("restore:family")
+        self.pool.alloc_tokens("restore:family", n_pool * bt,
+                               persistent=False)
+        pool_bytes = 2 * pool_k.size * pool_k.dtype.itemsize
+        page_b = 2 * L * bt * KV * hd * pool_k.dtype.itemsize
+        self._restore_info = {
+            "paged": True,
+            "n_restored": len(pending),
+            "n_mirrors": len(mirrors),
+            "nb": nb,                       # blocks per family member
+            "pool_pages": n_pool,           # nb + M*ndb (shared once)
+            "full_write_pages": (len(mirrors) + 1) * nb,  # un-shared cost
+            "page_bytes": page_b,
+            "bytes_materialized": pool_bytes + entry_bytes,
+            "dense_equiv_bytes": dense_equiv,
+        }
+
+    def _restore_dense(self, pending: list, mirrors: list,
+                       span_len: int) -> None:
+        """Parity oracle: per-mirror host gather back to dense entries.
+        The collector then re-densifies nothing (entries are already
+        dense), but end-to-end work here is O(M*S)."""
+        from repro.core.diff_store import trim_family
+        from repro.core.restore import (
+            fused_restore_family_shared,
+            gather_pages,
+        )
+
+        cfg = self.cfg
+        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+        restored = {}
+        pool_bytes = 0
+        if mirrors:
+            handles = trim_family(
+                [self.sessions[a].mirror for a in mirrors], span_len)
+            S = handles[0].diff.seq_len
+            pk_, pv_, page_idx = fused_restore_family_shared(handles)
+            pool_bytes = 2 * pk_.size * pk_.dtype.itemsize
+            for i, a in enumerate(mirrors):
+                restored[a] = gather_pages(pk_, pv_, page_idx[i], S)
+        entry_bytes = 0
+        for a in pending:
+            s = self.sessions[a]
+            span_len, out_sid = s.hist_pending        # set in _post_round
             if s.is_master:
                 rk, rv = self.td_master.k, self.td_master.v
             else:
@@ -327,16 +472,29 @@ class MultiAgentEngine:
             s.hist_entry = SegmentCacheEntry(
                 sid=f"hist:{a}:{self.round_idx}", k=hk, v=hv, src_pos=sp,
                 producer=a, round_idx=self.round_idx)
+            entry_bytes += s.hist_entry.nbytes()
+        self._restore_info = {
+            "paged": False,
+            "n_restored": len(pending),
+            "n_mirrors": len(mirrors),
+            "pool_pages": 0,
+            "bytes_materialized": pool_bytes + entry_bytes,
+            "dense_equiv_bytes": entry_bytes,
+        }
 
     def _recover_pic(self, tokens: jax.Array, layouts, aids, collective: bool):
+        from repro.core.collector import PagedPrivate
+
         N, S = tokens.shape
-        (sk, sv, src, smask, pk, pv, psrc, pmask, is_cached) = \
+        (sk, sv, src, smask, priv, pmask, is_cached) = \
             self._assemble_cached(layouts, aids)
         if not bool(np.asarray(smask).any() or np.asarray(pmask).any()):
             return self._recover_recompute(tokens)
         fresh = ~np.asarray(is_cached)
         n_sel = n_sel_for_blocks(fresh, self.block_select, self.ratio)
-        priv = (pk, pv, psrc, pmask) if pk is not None else None
+        if not collective and isinstance(priv, PagedPrivate):
+            # the serial baseline consumes dense priv tuples only
+            priv = priv.materialize(S)
 
         t0 = time.perf_counter()
         if collective:
@@ -444,6 +602,9 @@ class MultiAgentEngine:
         stats.t_restore = self._t_restore
         self._t_restore = 0.0
         stats.reuse.update({k_: v_ for k_, v_ in info.items() if k_ != "plan"})
+        if self._restore_info is not None:
+            stats.reuse["restore"] = self._restore_info
+            self._restore_info = None
         if self.keep_recovered and "k" in pcache:
             self.last_recovered = (np.asarray(pcache["k"]),
                                    np.asarray(pcache["v"]), list(layouts))

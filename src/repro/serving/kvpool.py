@@ -33,6 +33,25 @@ class Allocation:
 
 
 class PagedKVPool:
+    """Block-granular KV page allocator + byte ledger.
+
+    One page holds ``block_tokens`` tokens of K AND V across all layers
+    (``page_bytes`` = 2 * L * bt * KV * hd * itemsize). Owners are string
+    keys; an owner's allocation is replaced wholesale (``free`` then
+    ``alloc``). The serving engine uses well-known owner keys:
+    ``round:<aid>`` (transient per-round working set), ``sess:<aid>`` /
+    ``hist:<aid>`` / ``out:<aid>`` (persistent agent state),
+    ``td:master`` / ``td:mirrors`` (Diff-Aware Storage at rest) and
+    ``restore:family`` (the page-sharing restore pool, accounted ONCE per
+    Master family — the ledger face of §4.4: mirrors alias the Master's
+    pages instead of each allocating their own copy).
+
+    With ``materialize=True`` the pool also owns physical page tensors
+    ``pages_k``/``pages_v`` of shape [L, n_pages, bt, KV, hd] that the
+    fused-restore kernels write through slot maps; by default only the
+    ledger exists (benchmarks read peak/persistent bytes from it).
+    """
+
     def __init__(self, cfg: ModelConfig, n_pages: int,
                  block_tokens: int = 32, dtype=jnp.float32,
                  materialize: bool = False):
@@ -62,6 +81,16 @@ class PagedKVPool:
 
     # --------------------------------------------------------------- api
     def alloc(self, owner: str, n_pages: int, *, persistent: bool) -> Allocation:
+        """Claim ``n_pages`` free pages for ``owner``.
+
+        ``persistent=True`` marks state that survives the round (agent
+        histories, Diff-Aware Storage); ``False`` marks round-transient
+        working sets that :meth:`free_transient` reclaims in bulk.
+        Raises :class:`PoolExhausted` when the pool cannot satisfy the
+        request — the engine treats that as a preemption/swap event.
+        Re-allocating an existing owner without freeing first leaks the
+        old pages; call :meth:`free` first (engine convention).
+        """
         if len(self._free) < n_pages:
             raise PoolExhausted(
                 f"{owner}: need {n_pages}, free {len(self._free)}/{self.n_pages}")
@@ -72,15 +101,20 @@ class PagedKVPool:
         return a
 
     def alloc_tokens(self, owner: str, n_tokens: int, *, persistent: bool) -> Allocation:
+        """:meth:`alloc` sized in tokens: claims ``ceil(n_tokens / bt)``
+        pages (a partial trailing block still occupies a whole page)."""
         return self.alloc(owner, self.pages_for_tokens(n_tokens),
                           persistent=persistent)
 
     def free(self, owner: str) -> None:
+        """Return ``owner``'s pages to the free list (no-op if absent)."""
         a = self._allocs.pop(owner, None)
         if a is not None:
             self._free.extend(int(p) for p in a.pages)
 
     def free_transient(self) -> None:
+        """Reclaim every non-persistent allocation — the engine calls this
+        at round boundaries so only agent state carries over."""
         for owner in [o for o, a in self._allocs.items() if not a.persistent]:
             self.free(owner)
 

@@ -30,6 +30,7 @@ from repro.core.diff_store import (
     build_round_family,
     compression_stats,
     pack_family,
+    trim_family,
 )
 from repro.core.restore import (
     dense_restore,
@@ -215,6 +216,32 @@ def test_shared_page_family_matches_dense(counts):
         dk, dv = dense_restore(h, THETA)
         np.testing.assert_array_equal(np.asarray(gk), np.asarray(dk))
         np.testing.assert_array_equal(np.asarray(gv), np.asarray(dv))
+
+
+@pytest.mark.parametrize("span", [BT, 2 * BT, 3 * BT - 7])
+def test_trim_family_prefix_parity(span):
+    """Restoring a trimmed family == restoring the full family, on the
+    kept span, bit-for-bit — including a mid-block trim boundary."""
+    rng = np.random.default_rng(21)
+    nb = 4
+    _, handles = make_family(rng, nb, [0, 2, nb])
+    trimmed = trim_family(handles, span)
+    nbh = -(-span // BT)
+    pk, pv, page_idx = fused_restore_family_shared(trimmed)
+    assert page_idx.shape == (len(handles), nbh)
+    for m, h in enumerate(handles):
+        gk = pk[:, page_idx[m]].reshape(L, nbh * BT, KV, HD)[:, :span]
+        gv = pv[:, page_idx[m]].reshape(L, nbh * BT, KV, HD)[:, :span]
+        dk, dv = dense_restore(h, THETA)
+        np.testing.assert_array_equal(np.asarray(gk),
+                                      np.asarray(dk)[:, :span])
+        np.testing.assert_array_equal(np.asarray(gv),
+                                      np.asarray(dv)[:, :span])
+    # trimming keeps only in-span diff blocks
+    for t, h in zip(trimmed, handles):
+        assert t.diff.seq_len == span
+        assert (np.asarray(t.diff.block_idx) < nbh).all()
+        assert t.diff.n_blocks <= min(nbh, h.diff.n_blocks)
 
 
 def test_shared_page_rejects_unaligned():
