@@ -8,7 +8,7 @@ import numpy as np
 
 from benchmarks.common import Reporter, model
 from repro.core.rounds import generate_trace
-from repro.serving import MultiAgentEngine
+from repro.serving import ServingEngine, get_policy
 
 SCENARIOS = {  # paper workload IDs -> (workload, seed)
     1: ("generative_agents", 101), 2: ("generative_agents", 102),
@@ -21,9 +21,9 @@ SCENARIOS = {  # paper workload IDs -> (workload, seed)
 def _outputs(cfg, params, mode, workload, seed, n_agents, n_rounds):
     trace = generate_trace(workload, n_agents, n_rounds, cfg.vocab_size,
                            seed=seed, jitter_hist=False)
-    eng = MultiAgentEngine(params, cfg, mode, gen_len=32,
-                           recompute_ratio=0.1)
-    return [s.outputs for s in eng.run_trace(trace)]
+    eng = ServingEngine(params, cfg, get_policy(mode), gen_len=32,
+                        recompute_ratio=0.1)
+    return [s.outputs for s in eng.serve(trace)]
 
 
 def run(rep: Reporter, quick: bool = False) -> None:

@@ -21,7 +21,12 @@ import numpy as np
 
 from benchmarks.common import Reporter, model
 from repro.core.rounds import generate_trace
-from repro.serving import MultiAgentEngine, ServiceTimes, simulate_round_latency
+from repro.serving import (
+    ServingEngine,
+    get_policy,
+    service_times_from_stats,
+    simulate_round_latency,
+)
 
 MODES = ("recompute", "prefix", "pic", "tokendance")
 
@@ -32,19 +37,14 @@ def _measure(cfg, params, mode: str, n_agents: int):
     # short prompts reuse cannot beat one batched recompute prefill)
     trace = generate_trace("agent_society", n_agents, 2, cfg.vocab_size,
                            seed=5, jitter_hist=False)
-    eng = MultiAgentEngine(params, cfg, mode, gen_len=32,
-                           recompute_ratio=0.08)
-    stats = eng.run_trace(trace)
+    eng = ServingEngine(params, cfg, get_policy(mode), gen_len=32,
+                        recompute_ratio=0.08)
+    stats = eng.serve(trace)
     s = stats[-1]  # steady-state round (reuse active)
     dense_bytes = s.transient_peak_bytes / n_agents  # one dense cache
-    return ServiceTimes(
-        per_request_recover=s.t_recover / n_agents,
-        collective_recover=s.t_recover,
-        decode=s.t_decode,
-        restore=s.t_restore,
-        store=s.t_store,
+    return service_times_from_stats(
+        s, n_agents,
         collective=mode in ("recompute", "tokendance"),  # batched paths
-        persistent_per_agent=s.persistent_bytes / n_agents,
     ), s, dense_bytes
 
 

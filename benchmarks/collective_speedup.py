@@ -27,13 +27,13 @@ def _engine_recover_times(cfg, params, mode: str, n: int) -> float:
     """Steady-state recovery time per round on the full engine path
     (includes the per-request cache assembly CacheBlend actually pays)."""
     from repro.core.rounds import generate_trace
-    from repro.serving import MultiAgentEngine
+    from repro.serving import ServingEngine, get_policy
 
     trace = generate_trace("generative_agents", n, 3, cfg.vocab_size,
                            seed=13, jitter_hist=False)
-    eng = MultiAgentEngine(params, cfg, mode, gen_len=32,
-                           recompute_ratio=0.1)
-    stats = eng.run_trace(trace)
+    eng = ServingEngine(params, cfg, get_policy(mode), gen_len=32,
+                        recompute_ratio=0.1)
+    stats = eng.serve(trace)
     return float(np.mean([s.t_recover for s in stats[1:]]))
 
 

@@ -266,7 +266,7 @@ def paged_e2e(rep: Reporter, quick: bool = False) -> None:
     import numpy as np
 
     from repro.core.rounds import generate_trace
-    from repro.serving import MultiAgentEngine
+    from repro.serving import ServingEngine, TokenDancePolicy
 
     cfg, params = model()
     n_agents = (2, 3, 5) if quick else (2, 3, 5, 9)
@@ -277,9 +277,10 @@ def paged_e2e(rep: Reporter, quick: bool = False) -> None:
                                cfg.vocab_size, seed=11, jitter_hist=False)
         stats = {}
         for paged in (True, False):
-            eng = MultiAgentEngine(params, cfg, "tokendance", gen_len=32,
-                                   recompute_ratio=0.1, paged_history=paged)
-            stats[paged] = eng.run_trace(trace)
+            eng = ServingEngine(params, cfg,
+                                TokenDancePolicy(paged_history=paged),
+                                gen_len=32, recompute_ratio=0.1)
+            stats[paged] = eng.serve(trace)
         for r in range(n_rounds):   # paged path must not change results
             np.testing.assert_array_equal(stats[True][r].outputs,
                                           stats[False][r].outputs)

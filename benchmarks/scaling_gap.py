@@ -8,7 +8,7 @@ import numpy as np
 
 from benchmarks.common import Reporter, model
 from repro.core.rounds import generate_trace
-from repro.serving import MultiAgentEngine
+from repro.serving import ServingEngine, get_policy
 
 
 def run(rep: Reporter, quick: bool = False) -> None:
@@ -18,8 +18,8 @@ def run(rep: Reporter, quick: bool = False) -> None:
     # multi-agent: prefix-cached engine, caches persist across rounds
     trace = generate_trace("generative_agents", n_agents, n_rounds,
                            cfg.vocab_size, seed=2, jitter_hist=False)
-    eng = MultiAgentEngine(params, cfg, "prefix", gen_len=32)
-    stats = eng.run_trace(trace)
+    eng = ServingEngine(params, cfg, get_policy("prefix"), gen_len=32)
+    stats = eng.serve(trace)
     multi_peak = max(s.persistent_bytes + s.transient_peak_bytes
                      for s in stats)
     multi_lat = [s.t_round / n_agents for s in stats]
@@ -27,8 +27,8 @@ def run(rep: Reporter, quick: bool = False) -> None:
     # independent: same subrequest count, recompute mode, freed per round
     trace2 = generate_trace("generative_agents", n_agents, n_rounds,
                             cfg.vocab_size, seed=2, jitter_hist=False)
-    eng2 = MultiAgentEngine(params, cfg, "recompute", gen_len=32)
-    stats2 = eng2.run_trace(trace2)
+    eng2 = ServingEngine(params, cfg, get_policy("recompute"), gen_len=32)
+    stats2 = eng2.serve(trace2)
     ind_peak = max(s.transient_peak_bytes for s in stats2)
     ind_lat = [s.t_round / n_agents for s in stats2]
 

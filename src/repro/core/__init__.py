@@ -22,7 +22,16 @@ from repro.core.restore import (
     fused_restore_family_shared,
     fused_restore_paged,
 )
-from repro.core.rounds import AgentState, AllGatherTrace, Round, generate_trace, round_prompt
+from repro.core.rounds import (
+    AgentState,
+    AllGather,
+    AllGatherTrace,
+    GatherTopology,
+    Round,
+    SubsetGather,
+    generate_trace,
+    round_prompt,
+)
 from repro.core.segments import (
     PRIVATE,
     SHARED,

@@ -136,25 +136,37 @@ def _densify_paged(pool_k, pool_v, page_idx, tail_k, tail_v, *,
 @dataclass(frozen=True)
 class GroupKey:
     """Compatibility key: same active prompt length + same cached-span
-    layout (the execution constraints from §4.2)."""
+    layout (the execution constraints from §4.2), plus — when a gather
+    topology is in play — the same gather-source set (agents receiving
+    different output subsets share no block content, so they can never
+    share one collective pass)."""
 
     prompt_len: int
     layout: Tuple[bool, ...]     # is_cached mask
+    sources: Tuple[int, ...] = ()
 
     @classmethod
-    def of(cls, prompt_len: int, is_cached: np.ndarray) -> "GroupKey":
-        return cls(prompt_len, tuple(bool(b) for b in is_cached))
+    def of(cls, prompt_len: int, is_cached: np.ndarray,
+           sources: Tuple[int, ...] = ()) -> "GroupKey":
+        return cls(prompt_len, tuple(bool(b) for b in is_cached), sources)
 
 
 def group_compatible(
     requests: Sequence[Tuple[str, int, np.ndarray]],
+    topology=None,
 ) -> List[List[str]]:
     """Group (request_id, prompt_len, is_cached) triples into compatible
     sets; incompatible requests fall into their own group (single-request
-    fallback path)."""
+    fallback path). With a :class:`repro.core.rounds.GatherTopology`,
+    requests additionally split by gather-source set — the reuse-plan
+    grouping consumes the declared topology instead of assuming
+    all-to-all."""
+    src = ({} if topology is None
+           else topology.sources([rid for rid, _, _ in requests]))
     groups: Dict[GroupKey, List[str]] = {}
     for rid, plen, mask in requests:
-        groups.setdefault(GroupKey.of(plen, mask), []).append(rid)
+        key = GroupKey.of(plen, mask, src.get(rid, ()))
+        groups.setdefault(key, []).append(rid)
     return list(groups.values())
 
 

@@ -1,4 +1,5 @@
-"""All-Gather round abstraction (paper §2.1) and synthetic workload traces.
+"""All-Gather round abstraction (paper §2.1), gather topologies, and
+synthetic workload traces.
 
 A round: every agent holds a private history H_i, the scheduler gathers
 the previous round's output blocks O = {O_1..O_N} and each agent's next
@@ -8,6 +9,15 @@ evaluation workloads:
 * ``generative_agents`` — shorter private histories, fewer agents/round
 * ``agent_society``     — longer histories, more agents
 
+A :class:`GatherTopology` declares WHICH agents' outputs each agent
+receives — the paper evaluates the full All-Gather, but the serving layer
+is topology-generic: neighborhood or grouped rounds (KVFlow-style
+workflow awareness) express "agent i reads only its committee" without
+touching the reuse machinery. Agents with identical source sets form one
+gather group: they share a prompt layout and shared-block content, which
+is exactly the §4.2 compatibility constraint the KV Collector needs for
+a collective pass, and the unit at which Master families form (§4.3).
+
 Output blocks are either taken from the trace (replay mode) or generated
 by the engine (greedy decode) so accuracy divergence can compound across
 rounds like in the paper's Fig. 14.
@@ -15,7 +25,7 @@ rounds like in the paper's Fig. 14.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -51,6 +61,100 @@ class Round:
     index: int
     shared_blocks: List[np.ndarray]      # previous round outputs O^{t-1}
     tasks: Dict[str, np.ndarray]         # per-agent round task tokens
+
+
+# --------------------------------------------------------------------------
+# Gather topologies
+# --------------------------------------------------------------------------
+class GatherTopology:
+    """Declares which agents' outputs each agent receives in a round.
+
+    ``sources(agent_ids)`` maps every agent to the ordered tuple of
+    *agent indices* (into ``agent_ids``) whose previous-round outputs
+    appear in its prompt. Shared block ``j`` is always the output of
+    agent ``agent_ids[j]``, so a source tuple doubles as a prompt layout
+    order (``core.rounds.round_prompt``'s ``layout_order``).
+
+    ``gather_groups`` partitions agents by identical source tuples —
+    members of one group share shared-block content and prompt layout, so
+    they can share ONE collective recovery pass and form ONE Master
+    family. The full All-Gather is the single-group special case.
+    """
+
+    def sources(self, agent_ids: Sequence[str]) -> Dict[str, Tuple[int, ...]]:
+        raise NotImplementedError
+
+    def gather_groups(self, agent_ids: Sequence[str],
+                      members: Optional[Sequence[str]] = None) -> List[List[str]]:
+        """Partition ``members`` (default: all agents) into gather groups,
+        preserving order. ``agent_ids`` is the full round roster that
+        source indices refer to (admission may restrict ``members``)."""
+        src = self.sources(list(agent_ids))
+        groups: Dict[Tuple[int, ...], List[str]] = {}
+        for a in (agent_ids if members is None else members):
+            groups.setdefault(src[a], []).append(a)
+        return list(groups.values())
+
+
+@dataclass(frozen=True)
+class AllGather(GatherTopology):
+    """Every agent receives every agent's output (the paper's workload)."""
+
+    def sources(self, agent_ids: Sequence[str]) -> Dict[str, Tuple[int, ...]]:
+        full = tuple(range(len(agent_ids)))
+        return {a: full for a in agent_ids}
+
+
+@dataclass(frozen=True)
+class SubsetGather(GatherTopology):
+    """Explicit per-agent source sets (neighborhood / grouped rounds).
+
+    ``source_map`` maps agent id -> ordered tuple of source agent
+    indices. Constructors:
+
+    * :meth:`full` — every agent reads everyone; reproduces
+      :class:`AllGather` exactly (the parity anchor).
+    * :meth:`grouped` — contiguous committees of ``group_size``; each
+      agent reads its own committee's outputs.
+    * :meth:`neighborhood` — ring window of ``k`` neighbors each side
+      (plus self); every agent gets its own source set, so gather groups
+      degenerate to singletons — the collector's per-request fallback.
+    """
+
+    source_map: Tuple[Tuple[str, Tuple[int, ...]], ...]
+
+    @classmethod
+    def of(cls, mapping: Dict[str, Sequence[int]]) -> "SubsetGather":
+        return cls(tuple((a, tuple(int(j) for j in js))
+                         for a, js in mapping.items()))
+
+    @classmethod
+    def full(cls, agent_ids: Sequence[str]) -> "SubsetGather":
+        n = len(agent_ids)
+        return cls.of({a: range(n) for a in agent_ids})
+
+    @classmethod
+    def grouped(cls, agent_ids: Sequence[str], group_size: int) -> "SubsetGather":
+        m = {}
+        for i, a in enumerate(agent_ids):
+            g0 = (i // group_size) * group_size
+            m[a] = range(g0, min(g0 + group_size, len(agent_ids)))
+        return cls.of(m)
+
+    @classmethod
+    def neighborhood(cls, agent_ids: Sequence[str], k: int) -> "SubsetGather":
+        n = len(agent_ids)
+        # dict.fromkeys: order-preserving dedupe — a window wider than the
+        # ring (2k+1 > n) must not insert the same block twice
+        return cls.of({
+            a: dict.fromkeys((i + d) % n for d in range(-k, k + 1))
+            for i, a in enumerate(agent_ids)})
+
+    def sources(self, agent_ids: Sequence[str]) -> Dict[str, Tuple[int, ...]]:
+        m = dict(self.source_map)
+        missing = [a for a in agent_ids if a not in m]
+        assert not missing, f"topology lacks sources for {missing}"
+        return {a: m[a] for a in agent_ids}
 
 
 @dataclass

@@ -1,20 +1,57 @@
-from repro.serving.engine import MODES, MultiAgentEngine, RoundStats, Session
+from repro.serving.engine import MODES, MultiAgentEngine, ServingEngine
 from repro.serving.kvpool import Allocation, PagedKVPool, PoolExhausted
+from repro.serving.planner import RoundPlan, RoundPlanner
+from repro.serving.policies import (
+    POLICIES,
+    PICPolicy,
+    PolicyRuntime,
+    PrefixCachePolicy,
+    RecomputePolicy,
+    RecoveryPlan,
+    RecoveryResult,
+    ReusePolicy,
+    RoundContext,
+    TokenDancePolicy,
+    get_policy,
+    register_policy,
+)
 from repro.serving.scheduler import (
     ServiceTimes,
     max_agents_under_slo,
+    service_times_from_stats,
     simulate_round_latency,
 )
+from repro.serving.state import RoundStats, Session
 
 __all__ = [
+    # engine
     "MODES",
     "MultiAgentEngine",
+    "ServingEngine",
     "RoundStats",
     "Session",
+    # policies
+    "POLICIES",
+    "PICPolicy",
+    "PolicyRuntime",
+    "PrefixCachePolicy",
+    "RecomputePolicy",
+    "RecoveryPlan",
+    "RecoveryResult",
+    "ReusePolicy",
+    "RoundContext",
+    "TokenDancePolicy",
+    "get_policy",
+    "register_policy",
+    # planner + capacity model
+    "RoundPlan",
+    "RoundPlanner",
+    "ServiceTimes",
+    "max_agents_under_slo",
+    "service_times_from_stats",
+    "simulate_round_latency",
+    # pool
     "Allocation",
     "PagedKVPool",
     "PoolExhausted",
-    "ServiceTimes",
-    "max_agents_under_slo",
-    "simulate_round_latency",
 ]

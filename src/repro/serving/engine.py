@@ -1,21 +1,32 @@
-"""Round-synchronous multi-agent serving engine with four reuse modes:
+"""Round-synchronous multi-agent serving engine: a thin round loop over
+pluggable :class:`~repro.serving.policies.ReusePolicy` objects and
+declarative gather topologies.
 
-  recompute  — vLLM without reuse: full batched prefill every round
-  prefix     — vLLM + prefix caching: exact reuse of each agent's own
-               history prefix, fresh compute for everything after it
-  pic        — CacheBlend: per-request position-independent recovery
-               (N separate RoPE-align + selection passes per round)
-  tokendance — the paper: collective recovery (one shared pass/round)
-               + Master-Mirror diff storage + fused restore
+The four registered policies share the same model substrate, decode loop
+and accounting, so measured differences are attributable to the reuse
+strategy:
 
-All modes share the same model substrate, decode loop and accounting, so
-measured differences are attributable to the reuse strategy.
+  RecomputePolicy    — vLLM without reuse: full batched prefill/round
+  PrefixCachePolicy  — vLLM + prefix caching: exact own-prefix reuse
+  PICPolicy          — CacheBlend: per-request PIC recovery passes
+  TokenDancePolicy   — the paper: collective recovery (one shared
+                       pass/group) + Master-Mirror diffs + fused restore
+
+Each round the engine (1) partitions agents into gather groups from the
+:class:`~repro.core.rounds.GatherTopology` (All-Gather = one group), then
+per group (2) asks the policy to ``plan`` (host-side; includes restores),
+(3) ``recover`` (jitted), (4) runs the shared greedy decode, and (5) asks
+the policy to ``store``. ``serve(trace, planner)`` adds per-round SLO
+admission via :class:`~repro.serving.planner.RoundPlanner`.
+
+``MultiAgentEngine(mode=...)`` remains as a deprecated string-keyed shim
+with bit-exact behavior.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+import warnings
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -23,126 +34,83 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.collector import KVCollector
-from repro.core.diff_store import (
-    MasterCache,
-    MirrorHandle,
-    build_round_family,
-    compression_stats,
+from repro.core.rounds import (
+    AgentState,
+    AllGather,
+    AllGatherTrace,
+    GatherTopology,
+    Round,
+    round_prompt,
 )
-from repro.core.pic import n_sel_for_blocks
-from repro.core.rounds import AllGatherTrace, Round, round_prompt
-from repro.core.segments import (
-    SHARED,
-    PagedSegmentCacheEntry,
-    PromptLayout,
-    SegmentCacheEntry,
-    SegmentIndex,
-    segment_hash,
-)
-from repro.core.rounds import AgentState
-from repro.models import decode_step, prefill
-from repro.models.transformer import extend
+from repro.core.segments import PromptLayout, SegmentIndex
+from repro.models import decode_step
 from repro.serving.kvpool import PagedKVPool
+from repro.serving.planner import RoundPlan, RoundPlanner
+from repro.serving.policies import (
+    PolicyRuntime,
+    ReusePolicy,
+    RoundContext,
+    get_policy,
+)
+from repro.serving.state import RoundStats, Session
 
 MODES = ("recompute", "prefix", "pic", "tokendance")
 
 
-@dataclass
-class RoundStats:
-    round_idx: int
-    mode: str
-    n_agents: int
-    prompt_len: int
-    t_recover: float = 0.0       # prefill / PIC recovery (s)
-    t_restore: float = 0.0       # mirror restore on the critical path (s)
-    t_decode: float = 0.0
-    t_store: float = 0.0         # diff build / segment extraction (s)
-    persistent_bytes: int = 0    # cache state surviving the round
-    transient_peak_bytes: int = 0
-    outputs: Optional[np.ndarray] = None      # [N, G] generated tokens
-    reuse: dict = field(default_factory=dict)
+class ServingEngine:
+    """Thin round loop over one bound :class:`ReusePolicy`."""
 
-    @property
-    def t_round(self) -> float:
-        return self.t_recover + self.t_restore + self.t_decode + self.t_store
-
-
-@dataclass
-class Session:
-    agent_id: str
-    state: AgentState
-    # prefix mode: the agent's dense cache + the prompt it was built for
-    dense_k: Optional[jax.Array] = None       # [L, S, KV, hd]
-    dense_v: Optional[jax.Array] = None
-    prompt_tokens: Optional[np.ndarray] = None
-    # pic / tokendance: history segment cache (dense, or paged when the
-    # engine keeps restored families paged end-to-end)
-    hist_entry: Optional[object] = None   # SegmentCacheEntry | PagedSegmentCacheEntry
-    # tokendance: compressed persistent state
-    mirror: Optional[MirrorHandle] = None
-    is_master: bool = False
-    hist_pending: Optional[tuple] = None   # (hist span len, own-output sid)
-
-
-def _common_prefix(a: np.ndarray, b: np.ndarray) -> int:
-    n = min(a.shape[0], b.shape[0])
-    neq = np.nonzero(a[:n] != b[:n])[0]
-    return int(neq[0]) if neq.size else n
-
-
-class MultiAgentEngine:
     def __init__(
         self,
         params: dict,
         cfg: ModelConfig,
-        mode: str,
+        policy: Union[ReusePolicy, str] = "tokendance",
         *,
+        topology: Optional[GatherTopology] = None,
         gen_len: int = 16,
         recompute_ratio: float = 0.15,
         block_select: int = 32,
         check_layer: int = 1,
         pool_pages: int = 1 << 16,
         keep_recovered: bool = False,
-        paged_history: bool = True,
+        keep_logits: bool = False,
     ):
-        """``paged_history`` (tokendance only): keep restored mirror
-        histories PAGED through the collector — the family restore's page
-        pool + per-agent page tables flow into ``collective_reuse`` and
-        the gather happens inside the recovery jit, so no dense per-mirror
-        cache is materialized between restore and reuse. ``False`` selects
-        the dense oracle path (per-mirror host gather), kept for parity
-        testing and as the reference the paged path must match
-        bit-for-bit."""
-        assert mode in MODES, mode
-        if mode in ("pic", "tokendance") and (not cfg.has_attention or cfg.has_ssm):
+        if isinstance(policy, str):
+            policy = get_policy(policy)
+        if policy.requires_attention and (not cfg.has_attention or cfg.has_ssm):
             # PIC-style reuse is inapplicable to SSM/hybrid state
             # (DESIGN.md §5); those archs serve via full recompute.
-            mode = "recompute"
+            policy = get_policy("recompute")
         assert block_select == 0 or gen_len % block_select == 0, \
             "gen_len must be block-aligned so histories stay aligned"
-        self.params = params
         self.cfg = cfg
-        self.mode = mode
+        self.params = params
         self.gen_len = gen_len
-        self.ratio = recompute_ratio
         self.block_select = block_select
         self.sep_id = cfg.vocab_size - 1
+        self.topology = topology or AllGather()
         self.sessions: Dict[str, Session] = {}
         self.segment_index = SegmentIndex()
         self.pool = PagedKVPool(cfg, pool_pages)
         self.keep_recovered = keep_recovered
+        # record per-round first-token logits on RoundStats (host copy of
+        # [N, vocab] per round — parity-test food, off by default)
+        self.keep_logits = keep_logits
         self.last_recovered: Optional[tuple] = None
+        self._recovered_parts: list = []
         self.collector = KVCollector(
             params, cfg, check_layer=check_layer,
             recompute_ratio=recompute_ratio, block_select=block_select)
-        self._jit: dict = {}
-        self._warm: set = set()
+        self.rt = PolicyRuntime(
+            params=params, cfg=cfg, gen_len=gen_len, ratio=recompute_ratio,
+            block_select=block_select, sep_id=self.sep_id,
+            sessions=self.sessions, segment_index=self.segment_index,
+            pool=self.pool, collector=self.collector)
+        policy.bind(self.rt)
+        self.policy = policy
+        self.mode = policy.name          # legacy-facing alias
         self.round_idx = 0
         self.last_outputs: Dict[str, np.ndarray] = {}
-        self.td_master: Optional[MasterCache] = None
-        self.paged_history = paged_history
-        self._t_restore = 0.0
-        self._restore_info: Optional[dict] = None
 
     # ------------------------------------------------------------------
     def init_agents(self, trace: AllGatherTrace) -> None:
@@ -150,394 +118,44 @@ class MultiAgentEngine:
             self.sessions[aid] = Session(
                 aid, AgentState(aid, np.asarray(trace.init_histories[aid])))
 
-    # ---------------------------------------------------------- jit mgmt
-    def _get_jit(self, key, builder):
-        if key not in self._jit:
-            self._jit[key] = jax.jit(builder())
-        return self._jit[key]
-
-    def _timed(self, key, fn, *args):
-        """Warm up new shapes (compile excluded from timings), then time."""
-        if key not in self._warm:
-            jax.block_until_ready(fn(*args))
-            self._warm.add(key)
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        return out, time.perf_counter() - t0
-
     # ------------------------------------------------------------------
-    def _build_prompts(self, rnd: Round) -> Tuple[np.ndarray, List[PromptLayout], list]:
-        """Prompts for all agents; equal lengths by construction."""
+    def _build_prompts(
+        self, rnd: Round, gaids: List[str],
+        sources: Dict[str, Tuple[int, ...]],
+    ) -> List[Tuple[List[str], np.ndarray, List[PromptLayout]]]:
+        """Prompts for one gather group, partitioned into equal-length
+        batches. Group members share a source set, hence a layout — but
+        histories can differ in length when admission deferred an agent
+        for some rounds (its history did not grow), so the group is
+        further split by built prompt length and each partition serves as
+        its own batch. The uniform case (every serve without deferrals)
+        is a single partition."""
         shared = rnd.shared_blocks
         layouts, rows = [], []
-        aids = list(self.sessions)
-        for aid in aids:
+        for aid in gaids:
+            if shared:
+                bad = [j for j in sources[aid] if j >= len(shared)]
+                assert not bad, (
+                    f"topology sources {bad} for {aid} out of range for "
+                    f"{len(shared)} shared blocks")
+                order = list(sources[aid])
+            else:
+                order = []      # replay round 0: no output blocks yet
             lay = round_prompt(self.sessions[aid].state, shared,
                                rnd.tasks[aid], self.sep_id,
+                               layout_order=order,
                                align_blocks=self.block_select)
             layouts.append(lay)
             rows.append(lay.tokens)
-        lens = {r.shape[0] for r in rows}
-        assert len(lens) == 1, f"round prompts must be equal length, got {lens}"
-        return np.stack(rows), layouts, aids
-
-    # ------------------------------------------------------------------
-    # Phase A implementations
-    # ------------------------------------------------------------------
-    def _recover_recompute(self, tokens: jax.Array):
-        N, S = tokens.shape
-        key = ("prefill", N, S)
-        if key not in self._jit:
-            def f(toks):
-                logits, cache = prefill(self.params, self.cfg, toks, max_len=S)
-                return logits[:, -1], cache
-            self._jit[key] = jax.jit(f)
-        (logits, cache), dt = self._timed(key, self._jit[key], tokens)
-        return logits, cache, dt, {}
-
-    def _recover_prefix(self, tokens: jax.Array, aids: list):
-        N, S = tokens.shape
-        toks_np = np.asarray(tokens)
-        plens = []
-        for i, aid in enumerate(aids):
-            s = self.sessions[aid]
-            if s.prompt_tokens is None or s.dense_k is None:
-                plens.append(0)
-            else:
-                plens.append(min(_common_prefix(toks_np[i], s.prompt_tokens),
-                                 s.dense_k.shape[1]))
-        p = min(plens)  # equal-length sessions give equal p; be safe
-        if p == 0:
-            return self._recover_recompute(tokens)
-
-        kpre = jnp.stack([self.sessions[a].dense_k[:, :p] for a in aids], axis=1)
-        vpre = jnp.stack([self.sessions[a].dense_v[:, :p] for a in aids], axis=1)
-        key = ("extend", N, S, p)
-        if key not in self._jit:
-            def f(toks, kp, vp):
-                L = self.cfg.n_layers
-                KV, hd = self.cfg.n_kv_heads, self.cfg.resolved_head_dim
-                pad = S - p
-                cache = {
-                    "k": jnp.pad(kp, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
-                    "v": jnp.pad(vp, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
-                    "kv_pos": jnp.broadcast_to(
-                        jnp.arange(S, dtype=jnp.int32)[None], (N, S)),
-                    "kv_valid": jnp.broadcast_to(
-                        jnp.arange(S)[None] < p, (N, S)),
-                    "length": jnp.full((N,), p, jnp.int32),
-                }
-                logits, cache = extend(self.params, self.cfg, toks[:, p:], cache)
-                return logits[:, -1], {"k": cache["k"], "v": cache["v"]}
-            self._jit[key] = jax.jit(f)
-        (logits, cache), dt = self._timed(key, self._jit[key], tokens, kpre, vpre)
-        return logits, cache, dt, {"prefix_len": p}
-
-    def _assemble_cached(self, layouts: List[PromptLayout], aids: list):
-        """Build the shared cached arrays + per-agent history caches."""
-        cfg = self.cfg
-        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
-        S = layouts[0].length
-        shared_k = jnp.zeros((L, S, KV, hd), jnp.float32)
-        shared_v = jnp.zeros_like(shared_k)
-        src = np.arange(S, dtype=np.int32)
-        shared_mask = np.zeros(S, bool)
-        for span in layouts[0].spans:
-            if span.kind != SHARED:
-                continue
-            e = self.segment_index.get(span.sid)
-            if e is None:
-                continue
-            shared_k = shared_k.at[:, span.start : span.end].set(e.k)
-            shared_v = shared_v.at[:, span.start : span.end].set(e.v)
-            src[span.start : span.end] = e.src_pos
-            shared_mask[span.start : span.end] = True
-
-        # tokendance: agents' history caches live compressed between rounds;
-        # restore them Master+diff -> dense on the critical path (Alg. 1)
-        self._t_restore = 0.0
-        if self.mode == "tokendance" and self.td_master is not None:
-            t0 = time.perf_counter()
-            self._restore_hist_entries(aids)
-            self._t_restore = time.perf_counter() - t0
-
-        # per-agent history caches (span 0 = private history). Entries are
-        # either dense SegmentCacheEntry (pic mode / dense oracle) or
-        # PagedSegmentCacheEntry referencing the family restore's page
-        # pool — the latter flow to the collector WITHOUT densification.
-        hspan = layouts[0].spans[0]
-        priv_mask = np.zeros(S, bool)
-        priv = None
-        entries = [self.sessions[a].hist_entry for a in aids]
-        if all(e is not None for e in entries) and hspan.end > hspan.start:
-            priv_mask[hspan.start : hspan.end] = True
-            paged = [isinstance(e, PagedSegmentCacheEntry) for e in entries]
-            if all(paged) and all(e.pool_k is entries[0].pool_k
-                                  for e in entries):
-                priv = self._paged_priv(entries, hspan, S, priv_mask)
-            else:
-                if any(paged):   # mixed family: fall back to the oracle
-                    entries = [e.materialize() if isinstance(
-                        e, PagedSegmentCacheEntry) else e for e in entries]
-                priv = self._dense_priv(entries, hspan, S, priv_mask)
-        is_cached = shared_mask | priv_mask
-        return (shared_k, shared_v, jnp.asarray(src), jnp.asarray(shared_mask),
-                priv, jnp.asarray(priv_mask), is_cached)
-
-    def _dense_priv(self, entries, hspan, S: int, priv_mask) -> tuple:
-        """Pre-densified private caches: the collector's dense ``priv``
-        tuple ``(pk [N,L,S,KV,hd], pv, psrc [N,S], pmask [S])``."""
-        cfg = self.cfg
-        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
-        pks, pvs, srcs = [], [], []
-        for e in entries:
-            assert e.k.shape[1] == len(hspan), (e.k.shape, len(hspan))
-            full_k = jnp.zeros((L, S, KV, hd), jnp.float32)
-            full_v = jnp.zeros_like(full_k)
-            full_k = full_k.at[:, hspan.start : hspan.end].set(e.k)
-            full_v = full_v.at[:, hspan.start : hspan.end].set(e.v)
-            s_ = np.arange(S, dtype=np.int32)
-            s_[hspan.start : hspan.end] = e.src_pos
-            pks.append(full_k)
-            pvs.append(full_v)
-            srcs.append(s_)
-        return (jnp.stack(pks), jnp.stack(pvs),
-                jnp.asarray(np.stack(srcs)), jnp.asarray(priv_mask))
-
-    def _paged_priv(self, entries, hspan, S: int, priv_mask):
-        """Paged private caches: ONE family page pool + per-agent page
-        tables (plus each agent's dense output tail), gathered inside the
-        collector's jitted pass instead of here."""
-        from repro.core.collector import PagedPrivate
-
-        e0 = entries[0]
-        span_len, T = e0.seq_len, e0.tail_len
-        assert span_len + T == len(hspan), (span_len, T, len(hspan))
-        for e in entries:
-            assert e.seq_len == span_len and e.tail_len == T, \
-                "family entries must share the span layout"
-        rows = np.stack([np.asarray(e.page_idx) for e in entries])
-        srcs = []
-        for e in entries:
-            s_ = np.arange(S, dtype=np.int32)
-            s_[hspan.start : hspan.end] = e.src_pos
-            srcs.append(s_)
-        tail_k = tail_v = None
-        if T:
-            tail_k = jnp.stack([e.tail_k for e in entries])
-            tail_v = jnp.stack([e.tail_v for e in entries])
-        return PagedPrivate(
-            pool_k=e0.pool_k, pool_v=e0.pool_v,
-            page_idx=jnp.asarray(rows), src=jnp.asarray(np.stack(srcs)),
-            mask=jnp.asarray(priv_mask), start=hspan.start,
-            span_len=span_len, tail_k=tail_k, tail_v=tail_v)
-
-    def _restore_hist_entries(self, aids: list) -> None:
-        """Rebuild each agent's history-segment cache from the compressed
-        Master-Mirror state of the previous round plus its own output
-        segment (which doubles as the shared block it produced). The whole
-        Master family is restored in ONE family-batched launch: in-family
-        mirrors share the Master's frame, so the page-sharing mode writes
-        the Master's pages once plus each mirror's diff pages only — the
-        restore cost of a shared block is paid once regardless of agent
-        count (§4.2, §4.4).
-
-        Default (``paged_history``): the entries stay PAGED — each agent
-        gets a :class:`PagedSegmentCacheEntry` referencing the family's
-        shared page pool through its page table, and the collector
-        gathers pages inside its jitted pass, so per-mirror work stays
-        O(ndb) end-to-end instead of O(S). The dense branch below is the
-        parity oracle (one host gather per mirror, O(M*S))."""
-        pending = [a for a in aids
-                   if self.sessions[a].hist_entry is None
-                   and self.sessions[a].hist_pending is not None]
-        if not pending:
-            return
-        mirrors = [a for a in pending if not self.sessions[a].is_master]
-        # equal-length prompts give every family member the same span
-        span_len = self.sessions[pending[0]].hist_pending[0]
-        assert all(self.sessions[a].hist_pending[0] == span_len
-                   for a in pending)
-        if self.paged_history:
-            self._restore_paged(pending, mirrors, span_len)
-        else:
-            self._restore_dense(pending, mirrors, span_len)
-
-    def _restore_paged(self, pending: list, mirrors: list,
-                       span_len: int) -> None:
-        """One page-sharing family launch; entries reference the pool.
-        The family is first TRIMMED to the history span — restore covers
-        only the blocks recovery will read, so the pool holds
-        ``nbh + M*ndb_h`` pages independent of the rest of the previous
-        prompt."""
-        from repro.core.diff_store import _pad_to_blocks, trim_family
-        from repro.core.restore import fused_restore_family_shared
-
-        cfg = self.cfg
-        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
-        if mirrors:
-            handles = trim_family(
-                [self.sessions[a].mirror for a in mirrors], span_len)
-            bt = handles[0].diff.block_tokens
-            pool_k, pool_v, page_idx = fused_restore_family_shared(handles)
-        else:
-            # single-agent family: the pool is just the Master's blocks
-            bt = self.block_select or 32
-            mk = _pad_to_blocks(self.td_master.k[:, :span_len], bt)
-            mv = _pad_to_blocks(self.td_master.v[:, :span_len], bt)
-            nb_ = mk.shape[1] // bt
-            pool_k = mk.reshape(L, nb_, bt, KV, hd)
-            pool_v = mv.reshape(L, nb_, bt, KV, hd)
-            page_idx = np.zeros((0, nb_), np.int32)
-        nb = -(-span_len // bt)
-        master_row = np.arange(nb, dtype=np.int32)
-        mirror_row = {a: i for i, a in enumerate(mirrors)}
-        entry_bytes = 0
-        dense_equiv = 0
-        for a in pending:
-            s = self.sessions[a]
-            span_len, out_sid = s.hist_pending        # set in _post_round
-            row = (master_row if s.is_master
-                   else page_idx[mirror_row[a]])
-            nbh = -(-span_len // bt)
-            out_e = self.segment_index.get(out_sid)
-            sp = np.concatenate([np.arange(span_len, dtype=np.int32),
-                                 out_e.src_pos])
-            s.hist_entry = PagedSegmentCacheEntry(
-                sid=f"hist:{a}:{self.round_idx}", pool_k=pool_k,
-                pool_v=pool_v, page_idx=np.asarray(row[:nbh], np.int32),
-                src_pos=sp, seq_len=span_len, block_tokens=bt,
-                tail_k=out_e.k, tail_v=out_e.v,
-                producer=a, round_idx=self.round_idx)
-            entry_bytes += s.hist_entry.nbytes()
-            dense_equiv += 2 * L * (span_len + out_e.k.shape[1]) * KV * hd \
-                * pool_k.dtype.itemsize
-        # ledger: the family's shared pages are accounted ONCE, not once
-        # per mirror — this is the accounting face of §4.4's page sharing
-        n_pool = int(pool_k.shape[1])
-        self.pool.free("restore:family")
-        self.pool.alloc_tokens("restore:family", n_pool * bt,
-                               persistent=False)
-        pool_bytes = 2 * pool_k.size * pool_k.dtype.itemsize
-        page_b = 2 * L * bt * KV * hd * pool_k.dtype.itemsize
-        self._restore_info = {
-            "paged": True,
-            "n_restored": len(pending),
-            "n_mirrors": len(mirrors),
-            "nb": nb,                       # blocks per family member
-            "pool_pages": n_pool,           # nb + M*ndb (shared once)
-            "full_write_pages": (len(mirrors) + 1) * nb,  # un-shared cost
-            "page_bytes": page_b,
-            "bytes_materialized": pool_bytes + entry_bytes,
-            "dense_equiv_bytes": dense_equiv,
-        }
-
-    def _restore_dense(self, pending: list, mirrors: list,
-                       span_len: int) -> None:
-        """Parity oracle: per-mirror host gather back to dense entries.
-        The collector then re-densifies nothing (entries are already
-        dense), but end-to-end work here is O(M*S)."""
-        from repro.core.diff_store import trim_family
-        from repro.core.restore import (
-            fused_restore_family_shared,
-            gather_pages,
-        )
-
-        cfg = self.cfg
-        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
-        restored = {}
-        pool_bytes = 0
-        if mirrors:
-            handles = trim_family(
-                [self.sessions[a].mirror for a in mirrors], span_len)
-            S = handles[0].diff.seq_len
-            pk_, pv_, page_idx = fused_restore_family_shared(handles)
-            pool_bytes = 2 * pk_.size * pk_.dtype.itemsize
-            for i, a in enumerate(mirrors):
-                restored[a] = gather_pages(pk_, pv_, page_idx[i], S)
-        entry_bytes = 0
-        for a in pending:
-            s = self.sessions[a]
-            span_len, out_sid = s.hist_pending        # set in _post_round
-            if s.is_master:
-                rk, rv = self.td_master.k, self.td_master.v
-            else:
-                rk, rv = restored[a]
-            out_e = self.segment_index.get(out_sid)
-            hk = jnp.concatenate([rk[:, :span_len], out_e.k], axis=1)
-            hv = jnp.concatenate([rv[:, :span_len], out_e.v], axis=1)
-            sp = np.concatenate([np.arange(span_len, dtype=np.int32),
-                                 out_e.src_pos])
-            s.hist_entry = SegmentCacheEntry(
-                sid=f"hist:{a}:{self.round_idx}", k=hk, v=hv, src_pos=sp,
-                producer=a, round_idx=self.round_idx)
-            entry_bytes += s.hist_entry.nbytes()
-        self._restore_info = {
-            "paged": False,
-            "n_restored": len(pending),
-            "n_mirrors": len(mirrors),
-            "pool_pages": 0,
-            "bytes_materialized": pool_bytes + entry_bytes,
-            "dense_equiv_bytes": entry_bytes,
-        }
-
-    def _recover_pic(self, tokens: jax.Array, layouts, aids, collective: bool):
-        from repro.core.collector import PagedPrivate
-
-        N, S = tokens.shape
-        (sk, sv, src, smask, priv, pmask, is_cached) = \
-            self._assemble_cached(layouts, aids)
-        if not bool(np.asarray(smask).any() or np.asarray(pmask).any()):
-            return self._recover_recompute(tokens)
-        fresh = ~np.asarray(is_cached)
-        n_sel = n_sel_for_blocks(fresh, self.block_select, self.ratio)
-        if not collective and isinstance(priv, PagedPrivate):
-            # the serial baseline consumes dense priv tuples only
-            priv = priv.materialize(S)
-
-        t0 = time.perf_counter()
-        if collective:
-            key = ("coll", N, S, n_sel)
-            if key not in self._warm:
-                self.collector.collective_reuse(
-                    aids, tokens, sk, sv, src, smask, n_sel, priv)
-                self._warm.add(key)
-            p0 = self.collector.align_passes
-            t0 = time.perf_counter()
-            res = self.collector.collective_reuse(
-                aids, tokens, sk, sv, src, smask, n_sel, priv)
-            jax.block_until_ready(res.pic.recovered_k)
-            dt = time.perf_counter() - t0
-            k = res.pic.recovered_k                        # [L, N, S, KV, hd]
-            v = res.pic.recovered_v
-            logits = res.pic.logits
-            info = {"n_sel": n_sel, "plan": res.plan,
-                    "align_passes": self.collector.align_passes - p0}
-        else:
-            key = ("serial", S, n_sel)
-            if key not in self._warm:
-                self.collector.serial_reuse(
-                    aids[:1], tokens[:1], sk, sv, src, smask, n_sel,
-                    None if priv is None else tuple(
-                        x[:1] if i < 3 else x for i, x in enumerate(priv)))
-                self._warm.add(key)
-            p0 = self.collector.align_passes
-            t0 = time.perf_counter()
-            results = self.collector.serial_reuse(
-                aids, tokens, sk, sv, src, smask, n_sel, priv)
-            jax.block_until_ready([r.recovered_k for r in results])
-            dt = time.perf_counter() - t0
-            k = jnp.concatenate([r.recovered_k for r in results], axis=1)
-            v = jnp.concatenate([r.recovered_v for r in results], axis=1)
-            logits = jnp.concatenate([r.logits for r in results], axis=0)
-            info = {"n_sel": n_sel,
-                    "align_passes": self.collector.align_passes - p0}
-        return logits, {"k": k, "v": v}, dt, info
+        parts: Dict[int, list] = {}
+        for aid, lay, row in zip(gaids, layouts, rows):
+            parts.setdefault(row.shape[0], []).append((aid, lay, row))
+        return [([a for a, _, _ in p], np.stack([r for _, _, r in p]),
+                 [l for _, l, _ in p]) for p in parts.values()]
 
     # ------------------------------------------------------------------
     def _decode(self, first_logits, prefill_cache: dict, N: int, S: int):
-        """Greedy decode gen_len tokens for all agents from a prefill-state
+        """Greedy decode gen_len tokens for the group from a prefill-state
         cache (attention KV, SSM state, or both)."""
         cfg, G = self.cfg, self.gen_len
         total = S + G
@@ -557,16 +175,16 @@ class MultiAgentEngine:
             if key_ in prefill_cache:
                 cache[key_] = prefill_cache[key_]
         key = ("decode", N, total)
-        if key not in self._jit:
+        if key not in self.rt.jit:
             def f(tok, cache):
                 logits, cache = decode_step(self.params, cfg, tok, cache)
                 return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
-            self._jit[key] = jax.jit(f)
-        step = self._jit[key]
+            self.rt.jit[key] = jax.jit(f)
+        step = self.rt.jit[key]
         tok = jnp.argmax(first_logits, axis=-1).astype(jnp.int32)
-        if key not in self._warm:
+        if key not in self.rt.warm:
             jax.block_until_ready(step(tok, cache))
-            self._warm.add(key)
+            self.rt.warm.add(key)
         outs = [tok]
         t0 = time.perf_counter()
         for _ in range(G - 1):
@@ -577,150 +195,115 @@ class MultiAgentEngine:
         return np.stack([np.asarray(t) for t in outs], axis=1), cache, dt
 
     # ------------------------------------------------------------------
-    def run_round(self, rnd: Round) -> RoundStats:
-        cfg = self.cfg
-        # generate mode: use previous outputs as this round's shared blocks
+    def run_round(self, rnd: Round, plan: Optional[RoundPlan] = None) -> RoundStats:
+        # generate mode: use previous outputs as this round's shared blocks.
+        # Agents that have not produced yet (deferred by admission since
+        # round 0) contribute their trace replay block instead.
         if self.round_idx > 0 and self.last_outputs:
-            rnd = Round(rnd.index,
-                        [self.last_outputs[a] for a in self.sessions],
-                        rnd.tasks)
-        tokens_np, layouts, aids = self._build_prompts(rnd)
-        tokens = jnp.asarray(tokens_np)
-        N, S = tokens.shape
-        stats = RoundStats(self.round_idx, self.mode, N, S)
-
-        # ---- phase A: recovery / prefill --------------------------------
-        if self.mode == "recompute" or self.round_idx == 0:
-            logits, pcache, dt, info = self._recover_recompute(tokens)
-        elif self.mode == "prefix":
-            logits, pcache, dt, info = self._recover_prefix(tokens, aids)
-        elif self.mode == "pic":
-            logits, pcache, dt, info = self._recover_pic(tokens, layouts, aids, False)
-        else:
-            logits, pcache, dt, info = self._recover_pic(tokens, layouts, aids, True)
-        stats.t_recover = dt
-        stats.t_restore = self._t_restore
-        self._t_restore = 0.0
-        stats.reuse.update({k_: v_ for k_, v_ in info.items() if k_ != "plan"})
-        if self._restore_info is not None:
-            stats.reuse["restore"] = self._restore_info
-            self._restore_info = None
-        if self.keep_recovered and "k" in pcache:
-            self.last_recovered = (np.asarray(pcache["k"]),
-                                   np.asarray(pcache["v"]), list(layouts))
-
-        # transient working set: N dense caches of S+G tokens
-        self.pool.free_transient()
-        for a in aids:
-            self.pool.free(f"round:{a}")
-            self.pool.alloc_tokens(f"round:{a}", S + self.gen_len,
-                                   persistent=False)
-
-        # ---- phase C: decode ---------------------------------------------
-        outputs, cache, dt_dec = self._decode(logits, pcache, N, S)
-        stats.t_decode = dt_dec
-        stats.outputs = outputs
-
-        # ---- phase D: bookkeeping / storage --------------------------------
-        t0 = time.perf_counter()
-        self._post_round(rnd, layouts, aids, cache, outputs, info, stats)
-        stats.t_store = time.perf_counter() - t0
-
+            blocks = list(rnd.shared_blocks)
+            shared = []
+            for i, a in enumerate(self.sessions):
+                prev = self.last_outputs.get(
+                    a, blocks[i] if i < len(blocks) else None)
+                assert prev is not None, f"no output block for agent {a}"
+                shared.append(prev)
+            rnd = Round(rnd.index, shared, rnd.tasks)
+        all_ids = list(self.sessions)
+        admitted = (all_ids if plan is None
+                    else [a for a in plan.admitted if a in self.sessions])
+        topology = (plan.topology if plan is not None and plan.topology
+                    else self.topology)
+        stats = RoundStats(self.round_idx, self.policy.name, len(admitted), 0)
+        if plan is not None:
+            stats.admission = {
+                "max_agents": plan.max_agents,
+                "admitted": list(plan.admitted),
+                "deferred": list(plan.deferred),
+            }
+        groups = (topology.gather_groups(all_ids, admitted)
+                  if admitted else [])
+        out_rows: Dict[str, np.ndarray] = {}
+        logit_rows: Dict[str, np.ndarray] = {}
+        sources = topology.sources(all_ids)
+        if self.keep_recovered:
+            self._recovered_parts = []
+        for gi, gaids in enumerate(groups):
+            parts = self._build_prompts(rnd, gaids, sources)
+            for pj, (paids, tokens_np, layouts) in enumerate(parts):
+                gid = f"g{gi}" if len(parts) == 1 else f"g{gi}.{pj}"
+                for a, row, lg in self._run_group(
+                        gid, paids, tokens_np, layouts, stats):
+                    out_rows[a] = row
+                    logit_rows[a] = lg
+        if admitted:
+            stats.outputs = np.stack([out_rows[a] for a in admitted])
+            if self.keep_logits:
+                stats.first_logits = np.stack(
+                    [logit_rows[a] for a in admitted])
+        if self.keep_recovered and self._recovered_parts:
+            # single batch (the All-Gather norm): the familiar (k, v,
+            # layouts) tuple; multiple batches: one tuple per batch
+            self.last_recovered = (self._recovered_parts[0]
+                                   if len(self._recovered_parts) == 1
+                                   else self._recovered_parts)
         stats.transient_peak_bytes = self.pool.peak_bytes()
         self.pool.free_transient()
         stats.persistent_bytes = self._persistent_bytes()
         self.round_idx += 1
         return stats
 
-    # ------------------------------------------------------------------
-    def _post_round(self, rnd, layouts, aids, cache, outputs, info, stats):
-        cfg = self.cfg
-        S = layouts[0].length
-        G = self.gen_len
-        hspan = layouts[0].spans[0]
+    def _run_group(self, gid: str, gaids: List[str],
+                   tokens_np: np.ndarray, layouts: List[PromptLayout],
+                   stats: RoundStats):
+        """plan -> recover -> decode -> store for one equal-length batch
+        of a gather group."""
+        tokens = jnp.asarray(tokens_np)
+        N, S = tokens.shape
+        if stats.prompt_len == 0:
+            stats.prompt_len = S
 
-        # histories grow by each agent's own output
-        for i, a in enumerate(aids):
+        ctx = RoundContext(round_idx=self.round_idx, gid=gid,
+                           agent_ids=list(gaids), layouts=layouts,
+                           tokens=tokens_np)
+
+        # ---- phase A: plan (host) + recover (jitted) --------------------
+        rplan = self.policy.plan(ctx)
+        res = self.policy.recover(rplan, tokens)
+        stats.t_recover += res.t_recover
+        stats.t_restore += rplan.t_restore
+        for k_, v_ in res.info.items():
+            if k_ != "plan":
+                stats.merge_reuse(k_, v_)
+        if rplan.restore_info is not None:
+            stats.merge_reuse("restore", rplan.restore_info)
+        if self.keep_recovered and "k" in res.cache:
+            self._recovered_parts.append(
+                (np.asarray(res.cache["k"]),
+                 np.asarray(res.cache["v"]), list(layouts)))
+
+        # transient working set: N dense caches of S+G tokens (the restore
+        # pool allocated during plan() is reclaimed here, after its peak
+        # registered — same accounting order as the pre-policy engine)
+        self.pool.free_transient()
+        for a in gaids:
+            self.pool.free(f"round:{a}")
+            self.pool.alloc_tokens(f"round:{a}", S + self.gen_len,
+                                   persistent=False)
+
+        # ---- phase C: decode --------------------------------------------
+        outputs, cache, dt_dec = self._decode(res.logits, res.cache, N, S)
+        stats.t_decode += dt_dec
+
+        # ---- phase D: bookkeeping / storage -----------------------------
+        t0 = time.perf_counter()
+        for i, a in enumerate(gaids):
             self.sessions[a].state.extend_history(outputs[i])
             self.last_outputs[a] = outputs[i]
-
-        if self.mode == "recompute" or "k" not in cache:
-            return
-        kc, vc = cache["k"], cache["v"]   # [L, N, S+G, KV, hd]
-
-        if self.mode == "prefix":
-            for i, a in enumerate(aids):
-                s = self.sessions[a]
-                s.dense_k = kc[:, i]
-                s.dense_v = vc[:, i]
-                s.prompt_tokens = np.concatenate(
-                    [np.asarray(layouts[i].tokens), outputs[i]])
-                self.pool.free(f"sess:{a}")
-                self.pool.alloc_tokens(f"sess:{a}", S + G, persistent=True)
-            return
-
-        # pic / tokendance: extract next-round segments
-        # (a) each agent's output block O_i (shared next round)
-        for i, a in enumerate(aids):
-            sid = segment_hash(outputs[i])
-            self.segment_index.put(SegmentCacheEntry(
-                sid=sid, k=kc[:, i, S : S + G], v=vc[:, i, S : S + G],
-                src_pos=np.arange(S, S + G, dtype=np.int32),
-                producer=a, round_idx=self.round_idx))
-        if self.mode == "pic":
-            # CacheBlend keeps dense segment entries per agent
-            for i, a in enumerate(aids):
-                hk = jnp.concatenate([kc[:, i, hspan.start : hspan.end],
-                                      kc[:, i, S : S + G]], axis=1)
-                hv = jnp.concatenate([vc[:, i, hspan.start : hspan.end],
-                                      vc[:, i, S : S + G]], axis=1)
-                sp = np.concatenate([
-                    np.arange(hspan.start, hspan.end, dtype=np.int32),
-                    np.arange(S, S + G, dtype=np.int32)])
-                self.sessions[a].hist_entry = SegmentCacheEntry(
-                    sid=f"hist:{a}:{self.round_idx}", k=hk, v=hv, src_pos=sp,
-                    producer=a, round_idx=self.round_idx)
-                self.pool.free(f"hist:{a}")
-                self.pool.alloc_tokens(f"hist:{a}", hk.shape[1], persistent=True)
-                self.pool.free(f"out:{a}")
-                self.pool.alloc_tokens(f"out:{a}", G, persistent=True)
-            return
-
-        # tokendance: Master-Mirror compression of the round family over
-        # the prefill region [0, S); the decode tails are the O_i segments
-        # extracted above (irreducible new content, stored once and shared)
-        plan = info.get("plan")
-        master_idx = plan.master if plan is not None else 0
-        ks = jnp.swapaxes(kc[:, :, :S], 0, 1)   # [N, L, S, KV, hd]
-        vs = jnp.swapaxes(vc[:, :, :S], 0, 1)
-        master, handles = build_round_family(
-            aids, ks, vs, np.arange(S), master_idx,
-            block_tokens=self.block_select or 32)
-        self.td_master = master
-        cstats = compression_stats(master, handles)
-        stats.reuse["compression"] = cstats
-        hi = 0
-        for i, a in enumerate(aids):
-            s = self.sessions[a]
-            s.is_master = i == master_idx
-            s.mirror = None if s.is_master else handles[hi]
-            if not s.is_master:
-                hi += 1
-            # history cache deferred: restored from Master+diff next round
-            s.hist_entry = None
-            s.hist_pending = (hspan.end - hspan.start,
-                              segment_hash(outputs[i]))
-        # ledger: one dense master + sparse mirrors + the N output segments
-        self.pool.free("td:master")
-        self.pool.alloc_tokens("td:master", S, persistent=True)
-        mirror_bytes = sum(h.nbytes() for h in handles)
-        self.pool.free("td:mirrors")
-        self.pool.alloc(
-            "td:mirrors", -(-mirror_bytes // self.pool.page_bytes()),
-            persistent=True)
-        for a in aids:
-            self.pool.free(f"out:{a}")
-            self.pool.alloc_tokens(f"out:{a}", G, persistent=True)
+        self.policy.store(ctx, cache, outputs, res, stats)
+        stats.t_store += time.perf_counter() - t0
+        logits_np = (np.asarray(res.logits) if self.keep_logits
+                     else [None] * N)
+        return [(a, outputs[i], logits_np[i]) for i, a in enumerate(gaids)]
 
     # ------------------------------------------------------------------
     def _persistent_bytes(self) -> int:
@@ -732,9 +315,42 @@ class MultiAgentEngine:
         return total
 
     # ------------------------------------------------------------------
-    def run_trace(self, trace: AllGatherTrace, n_rounds: Optional[int] = None):
-        self.init_agents(trace)
+    def serve(self, trace: AllGatherTrace,
+              planner: Optional[RoundPlanner] = None,
+              n_rounds: Optional[int] = None) -> List[RoundStats]:
+        """Serve a trace: one :meth:`run_round` per round, each preceded
+        by the planner's admission decision (admit-all when absent)."""
+        if not self.sessions:
+            self.init_agents(trace)
         out = []
         for rnd in trace.rounds[: n_rounds or len(trace.rounds)]:
-            out.append(self.run_round(rnd))
+            plan = (None if planner is None else
+                    planner.plan_round(self.round_idx, list(self.sessions)))
+            out.append(self.run_round(rnd, plan))
         return out
+
+    def run_trace(self, trace: AllGatherTrace,
+                  n_rounds: Optional[int] = None) -> List[RoundStats]:
+        """Legacy alias for :meth:`serve` without a planner."""
+        return self.serve(trace, n_rounds=n_rounds)
+
+
+class MultiAgentEngine(ServingEngine):
+    """Deprecated mode-string front door, kept for compatibility.
+
+    ``MultiAgentEngine(params, cfg, "tokendance")`` resolves the mode
+    string through the policy registry and behaves bit-exactly like
+    ``ServingEngine(params, cfg, TokenDancePolicy())`` (the golden-parity
+    suite in ``tests/test_policy_parity.py`` pins this). New code should
+    construct a policy object."""
+
+    def __init__(self, params: dict, cfg: ModelConfig, mode: str, *,
+                 paged_history: bool = True, **kw):
+        warnings.warn(
+            "MultiAgentEngine(mode=...) is deprecated; pass a ReusePolicy "
+            "to ServingEngine (e.g. ServingEngine(params, cfg, "
+            "TokenDancePolicy())) instead.",
+            DeprecationWarning, stacklevel=2)
+        assert mode in MODES, mode
+        policy_kw = {"paged_history": paged_history} if mode == "tokendance" else {}
+        super().__init__(params, cfg, get_policy(mode, **policy_kw), **kw)

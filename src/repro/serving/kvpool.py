@@ -38,13 +38,14 @@ class PagedKVPool:
     One page holds ``block_tokens`` tokens of K AND V across all layers
     (``page_bytes`` = 2 * L * bt * KV * hd * itemsize). Owners are string
     keys; an owner's allocation is replaced wholesale (``free`` then
-    ``alloc``). The serving engine uses well-known owner keys:
+    ``alloc``). The serving policies use well-known owner keys:
     ``round:<aid>`` (transient per-round working set), ``sess:<aid>`` /
     ``hist:<aid>`` / ``out:<aid>`` (persistent agent state),
-    ``td:master`` / ``td:mirrors`` (Diff-Aware Storage at rest) and
-    ``restore:family`` (the page-sharing restore pool, accounted ONCE per
-    Master family — the ledger face of §4.4: mirrors alias the Master's
-    pages instead of each allocating their own copy).
+    ``td:master:<gid>`` / ``td:mirrors:<gid>`` (Diff-Aware Storage at
+    rest, one entry per gather group) and ``restore:family:<gid>`` (the
+    page-sharing restore pool, accounted ONCE per Master family — the
+    ledger face of §4.4: mirrors alias the Master's pages instead of
+    each allocating their own copy).
 
     With ``materialize=True`` the pool also owns physical page tensors
     ``pages_k``/``pages_v`` of shape [L, n_pages, bt, KV, hd] that the

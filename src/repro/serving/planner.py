@@ -1,0 +1,90 @@
+"""Round planning: gather topology + SLO admission ahead of each round.
+
+The :class:`RoundPlanner` is the piece that finally *uses* the capacity
+model in ``serving/scheduler.py`` on the serving path: given a measured
+(or modeled) ``ServiceTimes`` source, it runs
+:func:`~repro.serving.scheduler.max_agents_under_slo` before every round
+and admits only as many agents as the SLO sustains at the offered load.
+Deferred agents keep their sessions (and their last outputs stay in the
+gather) but do not run this round — the admission-control analogue of
+the paper's Fig. 10 capacity ceiling.
+
+``ServingEngine.serve(trace, planner)`` drives one ``plan_round`` per
+round and records the decision on ``RoundStats.admission``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+from repro.core.rounds import GatherTopology
+from repro.serving.scheduler import ServiceTimes, max_agents_under_slo
+
+
+@dataclass
+class RoundPlan:
+    """One round's admission decision, emitted by :class:`RoundPlanner`."""
+
+    round_idx: int
+    admitted: List[str]
+    deferred: List[str] = field(default_factory=list)
+    max_agents: int = 0                 # SLO cap; 0 = uncapped
+    topology: Optional[GatherTopology] = None   # overrides the engine's
+
+
+class RoundPlanner:
+    """Emits per-round :class:`RoundPlan`s from a topology + SLO model.
+
+    Parameters:
+      topology          — gather topology for planned rounds (``None``
+                          keeps the engine's own, default All-Gather).
+      measure           — ``(n_agents) -> ServiceTimes``; the capacity
+                          model input. ``None`` disables admission (all
+                          agents admitted — bit-identical to unplanned
+                          serving).
+      qps / slo_s       — offered load (subrequests/s) and the round
+                          latency SLO the admitted set must satisfy.
+      agent_range       — candidate agent counts for the SLO search
+                          (default ``1..n_agents``).
+      pool_budget_bytes — KV pool budget for the memory-fallback term.
+
+    Admission is ROUND-ROBIN fair: a rotating cursor advances by the cap
+    each planned round, so under a stable cap every agent is served
+    ``cap/n`` of the rounds — deferral means "not this round", never
+    permanent starvation of a fixed tail.
+    """
+
+    def __init__(self, topology: Optional[GatherTopology] = None, *,
+                 measure: Optional[Callable[[int], ServiceTimes]] = None,
+                 qps: float = 0.0, slo_s: float = math.inf,
+                 agent_range: Optional[Sequence[int]] = None,
+                 pool_budget_bytes: float = 0.0):
+        self.topology = topology
+        self.measure = measure
+        self.qps = qps
+        self.slo_s = slo_s
+        self.agent_range = agent_range
+        self.pool_budget_bytes = pool_budget_bytes
+        self._cursor = 0          # round-robin start of the admitted slice
+
+    @property
+    def admission_active(self) -> bool:
+        return (self.measure is not None and self.qps > 0.0
+                and math.isfinite(self.slo_s))
+
+    def plan_round(self, round_idx: int,
+                   agent_ids: Sequence[str]) -> RoundPlan:
+        aids = list(agent_ids)
+        if not self.admission_active:
+            return RoundPlan(round_idx, aids, [], 0, self.topology)
+        rng = self.agent_range or range(1, len(aids) + 1)
+        cap = max_agents_under_slo(
+            self.measure, self.qps, self.slo_s, rng,
+            pool_budget_bytes=self.pool_budget_bytes)
+        n_adm = min(cap, len(aids))
+        start = self._cursor % len(aids) if aids else 0
+        admitted = [aids[(start + i) % len(aids)] for i in range(n_adm)]
+        self._cursor = (start + n_adm) % len(aids) if aids else 0
+        deferred = [a for a in aids if a not in admitted]
+        return RoundPlan(round_idx, admitted, deferred, cap, self.topology)

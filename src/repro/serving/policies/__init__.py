@@ -1,0 +1,32 @@
+"""Policy-object serving API: one ``ReusePolicy`` per reuse strategy,
+plus the string-keyed registry behind the deprecated
+``MultiAgentEngine(mode=...)`` shim."""
+from repro.serving.policies.base import (
+    POLICIES,
+    PolicyRuntime,
+    RecoveryPlan,
+    RecoveryResult,
+    ReusePolicy,
+    RoundContext,
+    get_policy,
+    register_policy,
+)
+from repro.serving.policies.pic import PICPolicy
+from repro.serving.policies.prefix import PrefixCachePolicy
+from repro.serving.policies.recompute import RecomputePolicy
+from repro.serving.policies.tokendance import TokenDancePolicy
+
+__all__ = [
+    "POLICIES",
+    "PolicyRuntime",
+    "RecoveryPlan",
+    "RecoveryResult",
+    "ReusePolicy",
+    "RoundContext",
+    "get_policy",
+    "register_policy",
+    "PICPolicy",
+    "PrefixCachePolicy",
+    "RecomputePolicy",
+    "TokenDancePolicy",
+]

@@ -1,0 +1,289 @@
+"""The paper's policy: collective recovery (one shared pass per gather
+group) + Master-Mirror diff storage + fused paged restore.
+
+Inherits the cached-prompt assembly and recovery execution from
+``PICPolicy`` and flips it collective; adds the two pieces the paper
+builds on top of PIC: per-family Diff-Aware Storage after the round
+(§4.3) and the family-batched paged restore before the next one (§4.4).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.diff_store import (
+    MasterCache,
+    build_round_family,
+    compression_stats,
+)
+from repro.core.segments import PagedSegmentCacheEntry, SegmentCacheEntry, segment_hash
+from repro.serving.policies.base import RecoveryResult, RoundContext, register_policy
+from repro.serving.policies.pic import PICPolicy
+
+
+@register_policy("tokendance")
+class TokenDancePolicy(PICPolicy):
+    """Collective reuse + Master-Mirror storage + fused paged restore.
+
+    ``paged_history=True`` (default) keeps restored mirror histories
+    PAGED through the collector — the family restore's page pool +
+    per-agent page tables flow into ``collective_reuse`` and the gather
+    happens inside the recovery jit, so no dense per-mirror cache is
+    materialized between restore and reuse. ``False`` selects the dense
+    oracle path (per-mirror host gather), kept for parity testing and as
+    the reference the paged path must match bit-for-bit.
+
+    One Master family per gather group: ``masters`` is keyed by the
+    group's member tuple, so grouped/neighborhood topologies compress
+    each committee independently.
+    """
+
+    collective = True
+
+    def __init__(self, paged_history: bool = True) -> None:
+        super().__init__()
+        self.paged_history = paged_history
+        self.masters: Dict[tuple, MasterCache] = {}
+
+    # ---------------------------------------------------------- restore
+    def _restore_histories(self, ctx: RoundContext):
+        """Rebuild each group member's history-segment cache from the
+        compressed Master-Mirror state of the previous round plus its own
+        output segment (which doubles as the shared block it produced).
+        The whole Master family is restored in ONE family-batched launch:
+        in-family mirrors share the Master's frame, so the page-sharing
+        mode writes the Master's pages once plus each mirror's diff pages
+        only — the restore cost of a shared block is paid once regardless
+        of agent count (§4.2, §4.4).
+
+        Sessions are restored against the family they were COMPRESSED in
+        (``Session.family``), not the group they serve in now — under
+        per-round topology or admission changes one gather group can mix
+        members of several prior families, each restored from its own
+        Master in its own launch.
+
+        Default (``paged_history``): the entries stay PAGED — each agent
+        gets a :class:`PagedSegmentCacheEntry` referencing the family's
+        shared page pool through its page table, and the collector
+        gathers pages inside its jitted pass, so per-mirror work stays
+        O(ndb) end-to-end instead of O(S). The dense branch below is the
+        parity oracle (one host gather per mirror, O(M*S))."""
+        rt = self.rt
+        pending = [a for a in ctx.agent_ids
+                   if rt.sessions[a].hist_entry is None
+                   and rt.sessions[a].hist_pending is not None]
+        families: Dict[tuple, list] = {}
+        for a in pending:
+            fam = rt.sessions[a].family
+            if fam is not None and fam in self.masters:
+                families.setdefault(fam, []).append(a)
+        if not families:
+            return 0.0, None
+        t0 = time.perf_counter()
+        infos = []
+        for fi, (fam, members) in enumerate(families.items()):
+            master = self.masters[fam]
+            mirrors = [a for a in members if not rt.sessions[a].is_master]
+            # equal-length prompts give every family member the same span
+            span_len = rt.sessions[members[0]].hist_pending[0]
+            assert all(rt.sessions[a].hist_pending[0] == span_len
+                       for a in members)
+            gid = ctx.gid if len(families) == 1 else f"{ctx.gid}.f{fi}"
+            if self.paged_history:
+                infos.append(self._restore_paged(
+                    ctx, gid, master, members, mirrors, span_len))
+            else:
+                infos.append(self._restore_dense(
+                    ctx, master, members, mirrors, span_len))
+        info = infos[0] if len(infos) == 1 else infos
+        return time.perf_counter() - t0, info
+
+    def _restore_paged(self, ctx: RoundContext, gid: str,
+                       master: MasterCache,
+                       pending: list, mirrors: list, span_len: int) -> dict:
+        """One page-sharing family launch; entries reference the pool.
+        The family is first TRIMMED to the history span — restore covers
+        only the blocks recovery will read, so the pool holds
+        ``nbh + M*ndb_h`` pages independent of the rest of the previous
+        prompt."""
+        from repro.core.diff_store import _pad_to_blocks, trim_family
+        from repro.core.restore import fused_restore_family_shared
+
+        rt = self.rt
+        cfg = rt.cfg
+        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+        if mirrors:
+            handles = trim_family(
+                [rt.sessions[a].mirror for a in mirrors], span_len)
+            bt = handles[0].diff.block_tokens
+            pool_k, pool_v, page_idx = fused_restore_family_shared(handles)
+        else:
+            # single-agent family: the pool is just the Master's blocks
+            bt = rt.block_select or 32
+            mk = _pad_to_blocks(master.k[:, :span_len], bt)
+            mv = _pad_to_blocks(master.v[:, :span_len], bt)
+            nb_ = mk.shape[1] // bt
+            pool_k = mk.reshape(L, nb_, bt, KV, hd)
+            pool_v = mv.reshape(L, nb_, bt, KV, hd)
+            page_idx = np.zeros((0, nb_), np.int32)
+        nb = -(-span_len // bt)
+        master_row = np.arange(nb, dtype=np.int32)
+        mirror_row = {a: i for i, a in enumerate(mirrors)}
+        entry_bytes = 0
+        dense_equiv = 0
+        for a in pending:
+            s = rt.sessions[a]
+            span_len, out_sid = s.hist_pending        # set in store()
+            row = (master_row if s.is_master
+                   else page_idx[mirror_row[a]])
+            nbh = -(-span_len // bt)
+            out_e = rt.segment_index.get(out_sid)
+            sp = np.concatenate([np.arange(span_len, dtype=np.int32),
+                                 out_e.src_pos])
+            s.hist_entry = PagedSegmentCacheEntry(
+                sid=f"hist:{a}:{ctx.round_idx}", pool_k=pool_k,
+                pool_v=pool_v, page_idx=np.asarray(row[:nbh], np.int32),
+                src_pos=sp, seq_len=span_len, block_tokens=bt,
+                tail_k=out_e.k, tail_v=out_e.v,
+                producer=a, round_idx=ctx.round_idx)
+            entry_bytes += s.hist_entry.nbytes()
+            dense_equiv += 2 * L * (span_len + out_e.k.shape[1]) * KV * hd \
+                * pool_k.dtype.itemsize
+        # ledger: the family's shared pages are accounted ONCE, not once
+        # per mirror — this is the accounting face of §4.4's page sharing
+        n_pool = int(pool_k.shape[1])
+        rt.pool.free(f"restore:family:{gid}")
+        rt.pool.alloc_tokens(f"restore:family:{gid}", n_pool * bt,
+                             persistent=False)
+        pool_bytes = 2 * pool_k.size * pool_k.dtype.itemsize
+        page_b = 2 * L * bt * KV * hd * pool_k.dtype.itemsize
+        return {
+            "paged": True,
+            "n_restored": len(pending),
+            "n_mirrors": len(mirrors),
+            "nb": nb,                       # blocks per family member
+            "pool_pages": n_pool,           # nb + M*ndb (shared once)
+            "full_write_pages": (len(mirrors) + 1) * nb,  # un-shared cost
+            "page_bytes": page_b,
+            "bytes_materialized": pool_bytes + entry_bytes,
+            "dense_equiv_bytes": dense_equiv,
+        }
+
+    def _restore_dense(self, ctx: RoundContext, master: MasterCache,
+                       pending: list, mirrors: list, span_len: int) -> dict:
+        """Parity oracle: per-mirror host gather back to dense entries.
+        The collector then re-densifies nothing (entries are already
+        dense), but end-to-end work here is O(M*S)."""
+        from repro.core.diff_store import trim_family
+        from repro.core.restore import (
+            fused_restore_family_shared,
+            gather_pages,
+        )
+
+        rt = self.rt
+        restored = {}
+        pool_bytes = 0
+        if mirrors:
+            handles = trim_family(
+                [rt.sessions[a].mirror for a in mirrors], span_len)
+            S = handles[0].diff.seq_len
+            pk_, pv_, page_idx = fused_restore_family_shared(handles)
+            pool_bytes = 2 * pk_.size * pk_.dtype.itemsize
+            for i, a in enumerate(mirrors):
+                restored[a] = gather_pages(pk_, pv_, page_idx[i], S)
+        entry_bytes = 0
+        for a in pending:
+            s = rt.sessions[a]
+            span_len, out_sid = s.hist_pending        # set in store()
+            if s.is_master:
+                rk, rv = master.k, master.v
+            else:
+                rk, rv = restored[a]
+            out_e = rt.segment_index.get(out_sid)
+            hk = jnp.concatenate([rk[:, :span_len], out_e.k], axis=1)
+            hv = jnp.concatenate([rv[:, :span_len], out_e.v], axis=1)
+            sp = np.concatenate([np.arange(span_len, dtype=np.int32),
+                                 out_e.src_pos])
+            s.hist_entry = SegmentCacheEntry(
+                sid=f"hist:{a}:{ctx.round_idx}", k=hk, v=hv, src_pos=sp,
+                producer=a, round_idx=ctx.round_idx)
+            entry_bytes += s.hist_entry.nbytes()
+        return {
+            "paged": False,
+            "n_restored": len(pending),
+            "n_mirrors": len(mirrors),
+            "pool_pages": 0,
+            "bytes_materialized": pool_bytes + entry_bytes,
+            "dense_equiv_bytes": entry_bytes,
+        }
+
+    # ------------------------------------------------------------- store
+    def store(self, ctx: RoundContext, cache: dict, outputs: np.ndarray,
+              result: RecoveryResult, stats) -> None:
+        if "k" not in cache:
+            return
+        rt = self.rt
+        kc, vc = cache["k"], cache["v"]   # [L, N, S+G, KV, hd]
+        S, G = ctx.prompt_len, rt.gen_len
+        aids = ctx.agent_ids
+        hspan = ctx.layouts[0].spans[0]
+        self._store_output_segments(ctx, kc, vc, outputs)
+
+        # Master-Mirror compression of the round family over the prefill
+        # region [0, S); the decode tails are the O_i segments extracted
+        # above (irreducible new content, stored once and shared)
+        plan = result.info.get("plan")
+        master_idx = plan.master if plan is not None else 0
+        ks = jnp.swapaxes(kc[:, :, :S], 0, 1)   # [N, L, S, KV, hd]
+        vs = jnp.swapaxes(vc[:, :, :S], 0, 1)
+        master, handles = build_round_family(
+            aids, ks, vs, np.arange(S), master_idx,
+            block_tokens=rt.block_select or 32)
+        self.masters[ctx.group_key] = master
+        cstats = compression_stats(master, handles)
+        stats.merge_reuse("compression", cstats)
+        hi = 0
+        for i, a in enumerate(aids):
+            s = rt.sessions[a]
+            s.is_master = i == master_idx
+            s.mirror = None if s.is_master else handles[hi]
+            if not s.is_master:
+                hi += 1
+            s.family = ctx.group_key
+            # history cache deferred: restored from Master+diff next round
+            s.hist_entry = None
+            s.hist_pending = (hspan.end - hspan.start,
+                              segment_hash(outputs[i]))
+        # evict masters no session references anymore (every member has
+        # since been re-compressed into a newer family) — a recurring
+        # group tuple can then never restore against a stale Master, the
+        # dict does not grow one dense cache per historical grouping, and
+        # the evicted family's PERSISTENT pool ledger entries go with it
+        # (owner keys derive from the family, so regrouping cannot strand
+        # a stale td:master allocation under a dead group id)
+        for key in [k for k in self.masters if k != ctx.group_key
+                    and not any(rt.sessions[m].family == k
+                                for m in k if m in rt.sessions)]:
+            del self.masters[key]
+            rt.pool.free(f"td:master:{self._fam_owner(key)}")
+            rt.pool.free(f"td:mirrors:{self._fam_owner(key)}")
+        # ledger: one dense master + sparse mirrors + the N output segments
+        fam = self._fam_owner(ctx.group_key)
+        rt.pool.free(f"td:master:{fam}")
+        rt.pool.alloc_tokens(f"td:master:{fam}", S, persistent=True)
+        mirror_bytes = sum(h.nbytes() for h in handles)
+        rt.pool.free(f"td:mirrors:{fam}")
+        rt.pool.alloc(
+            f"td:mirrors:{fam}", -(-mirror_bytes // rt.pool.page_bytes()),
+            persistent=True)
+        for a in aids:
+            rt.pool.free(f"out:{a}")
+            rt.pool.alloc_tokens(f"out:{a}", G, persistent=True)
+
+    @staticmethod
+    def _fam_owner(group_key: tuple) -> str:
+        """Stable pool-owner suffix for a Master family."""
+        return "+".join(group_key)

@@ -41,6 +41,25 @@ class ServiceTimes:
     recompute_round: float = 0.0        # full-recompute round cost (s)
 
 
+def service_times_from_stats(stats, n_agents: int, *, collective: bool,
+                             recompute_round: float = 0.0) -> ServiceTimes:
+    """Build a :class:`ServiceTimes` point from a measured round
+    (``RoundStats``) — the bridge from the engine's per-round ledger into
+    the capacity model. Serial policies' per-request cost is the measured
+    recovery divided across the round's agents; collective policies carry
+    the whole measured pass as the one-per-round cost."""
+    return ServiceTimes(
+        per_request_recover=stats.t_recover / n_agents,
+        collective_recover=stats.t_recover,
+        decode=stats.t_decode,
+        restore=stats.t_restore,
+        store=stats.t_store,
+        collective=collective,
+        persistent_per_agent=stats.persistent_bytes / n_agents,
+        recompute_round=recompute_round,
+    )
+
+
 def round_service_time(st: ServiceTimes, n_agents: int,
                        pool_budget_bytes: float = 0.0) -> float:
     """Effective service time of one round, including swap fallback."""

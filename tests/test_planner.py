@@ -1,0 +1,155 @@
+"""RoundPlanner: the SLO capacity model (serving/scheduler.py) wired into
+the serving path — admission decisions computed per round via
+``max_agents_under_slo`` and recorded on ``RoundStats.admission``."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.rounds import generate_trace
+from repro.models import init_params
+from repro.serving import (
+    RoundPlanner,
+    ServiceTimes,
+    ServingEngine,
+    get_policy,
+    max_agents_under_slo,
+    service_times_from_stats,
+    simulate_round_latency,
+)
+
+N_AGENTS = 4
+GEN = 32
+
+
+def _measure_serial(n):
+    """Fabricated capacity model: 0.1s per serial request + 0.05s decode.
+    At qps=2, slo=0.35s only 2 agents fit (n=3 -> 0.456s latency)."""
+    return ServiceTimes(per_request_recover=0.1, collective_recover=0.15,
+                        decode=0.05, collective=False)
+
+
+# --------------------------------------------------------------- unit level
+def test_max_agents_under_slo_caps_admission():
+    assert max_agents_under_slo(_measure_serial, 2.0, 0.35, range(1, 9)) == 2
+    assert max_agents_under_slo(_measure_serial, 2.0, 10.0, range(1, 5)) == 4
+    # collective service amortizes the per-request cost -> higher cap
+    coll = lambda n: ServiceTimes(per_request_recover=0.1,
+                                  collective_recover=0.15, decode=0.05,
+                                  collective=True)
+    assert (max_agents_under_slo(coll, 2.0, 0.35, range(1, 9))
+            > max_agents_under_slo(_measure_serial, 2.0, 0.35, range(1, 9)))
+
+
+def test_planner_emits_admission_plans():
+    aids = [f"a{i}" for i in range(6)]
+    pl = RoundPlanner(measure=_measure_serial, qps=2.0, slo_s=0.35)
+    plan = pl.plan_round(0, aids)
+    assert plan.admitted == aids[:2]
+    assert plan.deferred == aids[2:]
+    assert plan.max_agents == 2
+    # round-robin: the admitted slice rotates, so no fixed tail starves
+    assert pl.plan_round(1, aids).admitted == aids[2:4]
+    assert pl.plan_round(2, aids).admitted == aids[4:6]
+    assert pl.plan_round(3, aids).admitted == aids[:2]
+    # no SLO model -> admit everyone (bit-identical to unplanned serving)
+    assert RoundPlanner().plan_round(0, aids).admitted == aids
+    assert not RoundPlanner().admission_active
+
+
+def test_service_times_from_stats_round_trip():
+    class S:  # minimal RoundStats stand-in
+        t_recover, t_decode, t_restore, t_store = 0.4, 0.1, 0.02, 0.01
+        persistent_bytes = 4000
+    st = service_times_from_stats(S, 4, collective=False,
+                                  recompute_round=0.9)
+    assert st.per_request_recover == pytest.approx(0.1)
+    assert st.collective_recover == pytest.approx(0.4)
+    assert st.persistent_per_agent == pytest.approx(1000)
+    assert st.recompute_round == pytest.approx(0.9)
+    assert np.isfinite(simulate_round_latency(st, 4, qps=1.0))
+
+
+# -------------------------------------------------------------- engine level
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen2.5-7b").replace(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_serve_applies_admission(setup):
+    """serve(trace, planner): a tight SLO defers agents; per-round stats
+    carry the decision; admission rotates round-robin so a deferred
+    agent's history pauses, it does not starve."""
+    cfg, params = setup
+    trace = generate_trace("generative_agents", N_AGENTS, 3, cfg.vocab_size,
+                           seed=11, jitter_hist=False)
+    eng = ServingEngine(params, cfg, get_policy("tokendance"), gen_len=GEN,
+                        recompute_ratio=0.1)
+    planner = RoundPlanner(measure=_measure_serial, qps=2.0, slo_s=0.35)
+    stats = eng.serve(trace, planner=planner)
+    h0 = 64  # generative_agents initial history
+    for s in stats:
+        assert s.n_agents == 2
+        assert s.outputs.shape == (2, GEN)
+        assert s.admission["max_agents"] == 2
+        assert len(s.admission["deferred"]) == 2
+    # round-robin: 0+1, then 2+3, then 0+1 again
+    assert stats[0].admission["admitted"] == ["agent0", "agent1"]
+    assert stats[1].admission["admitted"] == ["agent2", "agent3"]
+    assert stats[2].admission["admitted"] == ["agent0", "agent1"]
+    assert eng.sessions["agent0"].state.history.shape[0] == h0 + 2 * GEN
+    assert eng.sessions["agent3"].state.history.shape[0] == h0 + GEN
+
+
+def test_readmitted_agents_rejoin_cleanly(setup):
+    """An agent deferred for some rounds has a shorter history; when the
+    admission cap rises it must rejoin without breaking the round — it
+    serves in its own equal-length batch of the gather group, and its
+    reuse state rebuilds from there."""
+    from repro.serving import RoundPlan
+
+    cfg, params = setup
+    trace = generate_trace("generative_agents", N_AGENTS, 3, cfg.vocab_size,
+                           seed=11, jitter_hist=False)
+    eng = ServingEngine(params, cfg, get_policy("tokendance"), gen_len=GEN,
+                        recompute_ratio=0.1)
+    eng.init_agents(trace)
+    aids = list(eng.sessions)
+    s0 = eng.run_round(trace.rounds[0],
+                       RoundPlan(0, aids[:2], aids[2:], max_agents=2))
+    assert s0.outputs.shape == (2, GEN)
+    # cap rises: all four admitted; agent2/3 have 2*GEN fewer history
+    # tokens than agent0/1 -> two equal-length batches inside the group
+    s1 = eng.run_round(trace.rounds[1], RoundPlan(1, aids, [], max_agents=4))
+    assert s1.outputs.shape == (N_AGENTS, GEN)
+    assert s1.n_agents == N_AGENTS
+    # per-batch ledgers accumulated (one reuse batch per prompt length)
+    h0 = 64
+    assert eng.sessions["agent0"].state.history.shape[0] == h0 + 2 * GEN
+    assert eng.sessions["agent3"].state.history.shape[0] == h0 + GEN
+    # next uniformity point: everyone served, families re-form per batch
+    s2 = eng.run_round(trace.rounds[2], RoundPlan(2, aids, [], max_agents=4))
+    assert s2.outputs.shape == (N_AGENTS, GEN)
+    # masters are keyed by the families actually compressed, and evicted
+    # once no session references them
+    fams = {eng.sessions[a].family for a in aids}
+    assert set(eng.policy.masters) == fams
+
+
+def test_serve_without_planner_is_unchanged(setup):
+    """planner=None must be byte-identical to plain run_trace."""
+    cfg, params = setup
+
+    def trace():
+        return generate_trace("generative_agents", N_AGENTS, 2,
+                              cfg.vocab_size, seed=11, jitter_hist=False)
+
+    a = ServingEngine(params, cfg, get_policy("tokendance"), gen_len=GEN,
+                      recompute_ratio=0.1).serve(trace())
+    b = ServingEngine(params, cfg, get_policy("tokendance"), gen_len=GEN,
+                      recompute_ratio=0.1).run_trace(trace())
+    for sa, sb in zip(a, b):
+        np.testing.assert_array_equal(sa.outputs, sb.outputs)
+        assert sa.admission is None and sb.admission is None

@@ -1,0 +1,131 @@
+"""Golden parity for the policy-object serving API (the refactor's
+safety net): a frozen trace served under every legacy mode string must be
+indistinguishable — outputs, recovery logits, reuse ledgers, byte
+ledgers — from the same trace served through the corresponding policy
+object, and the ``mode=`` shim must say it is deprecated."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.rounds import generate_trace
+from repro.models import init_params
+from repro.serving import (
+    MODES,
+    MultiAgentEngine,
+    PICPolicy,
+    PrefixCachePolicy,
+    RecomputePolicy,
+    ServingEngine,
+    TokenDancePolicy,
+    get_policy,
+)
+
+N_AGENTS = 3
+N_ROUNDS = 3
+GEN = 32
+
+POLICY_CLASSES = {
+    "recompute": RecomputePolicy,
+    "prefix": PrefixCachePolicy,
+    "pic": PICPolicy,
+    "tokendance": TokenDancePolicy,
+}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen2.5-7b").replace(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _trace(cfg):
+    return generate_trace("generative_agents", N_AGENTS, N_ROUNDS,
+                          cfg.vocab_size, seed=11, jitter_hist=False)
+
+
+@pytest.fixture(scope="module")
+def served(setup):
+    """Every mode served twice: legacy shim vs explicit policy object."""
+    cfg, params = setup
+    out = {}
+    for mode in MODES:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            legacy = MultiAgentEngine(params, cfg, mode, gen_len=GEN,
+                                      recompute_ratio=0.1, keep_logits=True)
+        ls = legacy.run_trace(_trace(cfg))
+        modern = ServingEngine(params, cfg, POLICY_CLASSES[mode](),
+                               gen_len=GEN, recompute_ratio=0.1,
+                               keep_logits=True)
+        ms = modern.serve(_trace(cfg))
+        out[mode] = (ls, ms)
+    return out
+
+
+def _assert_ledgers_equal(a: dict, b: dict, where):
+    assert set(a) == set(b), (where, set(a), set(b))
+    for k in a:
+        if isinstance(a[k], dict):
+            _assert_ledgers_equal(a[k], b[k], (*where, k))
+        else:
+            assert np.all(np.asarray(a[k]) == np.asarray(b[k])), (*where, k)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_policy_matches_legacy_mode(served, mode):
+    ls, ms = served[mode]
+    for r in range(N_ROUNDS):
+        np.testing.assert_array_equal(ls[r].outputs, ms[r].outputs)
+        np.testing.assert_array_equal(ls[r].first_logits, ms[r].first_logits)
+        _assert_ledgers_equal(
+            {k: v for k, v in ls[r].reuse.items() if k != "plan"},
+            {k: v for k, v in ms[r].reuse.items() if k != "plan"},
+            (mode, r))
+        assert ls[r].persistent_bytes == ms[r].persistent_bytes, (mode, r)
+        assert ls[r].transient_peak_bytes == ms[r].transient_peak_bytes, (mode, r)
+        assert ls[r].mode == ms[r].mode == mode
+
+
+def test_tokendance_dense_oracle_parity(setup):
+    """The paged_history plumbing survives the lift: dense oracle ==
+    paged default through the policy object, and the shim forwards the
+    flag."""
+    cfg, params = setup
+    paged = ServingEngine(params, cfg, TokenDancePolicy(paged_history=True),
+                          gen_len=GEN, recompute_ratio=0.1,
+                          keep_logits=True).serve(_trace(cfg))
+    dense = ServingEngine(params, cfg, TokenDancePolicy(paged_history=False),
+                          gen_len=GEN, recompute_ratio=0.1,
+                          keep_logits=True).serve(_trace(cfg))
+    for r in range(N_ROUNDS):
+        np.testing.assert_array_equal(paged[r].outputs, dense[r].outputs)
+        np.testing.assert_array_equal(paged[r].first_logits,
+                                      dense[r].first_logits)
+    assert paged[-1].reuse["restore"]["paged"]
+    assert not dense[-1].reuse["restore"]["paged"]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        shim = MultiAgentEngine(params, cfg, "tokendance",
+                                paged_history=False, gen_len=GEN)
+    assert shim.policy.paged_history is False
+
+
+def test_mode_shim_emits_deprecation_warning(setup):
+    cfg, params = setup
+    with pytest.warns(DeprecationWarning, match="MultiAgentEngine"):
+        eng = MultiAgentEngine(params, cfg, "recompute", gen_len=GEN)
+    assert eng.mode == "recompute"
+    assert isinstance(eng.policy, RecomputePolicy)
+
+
+def test_registry_round_trips_every_mode():
+    for mode in MODES:
+        p = get_policy(mode)
+        assert p.name == mode
+        assert isinstance(p, POLICY_CLASSES[mode])
+    with pytest.raises(KeyError):
+        get_policy("no-such-policy")

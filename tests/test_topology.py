@@ -1,0 +1,141 @@
+"""Gather topologies: declarative control over which agents' outputs each
+agent receives, consumed by prompt building, collector grouping and
+Master-family formation."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.collector import group_compatible
+from repro.core.rounds import AllGather, SubsetGather, generate_trace
+from repro.models import init_params
+from repro.serving import ServingEngine, get_policy
+
+N_AGENTS = 4
+N_ROUNDS = 3
+GEN = 32
+AIDS = [f"agent{i}" for i in range(N_AGENTS)]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen2.5-7b").replace(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _trace(cfg):
+    return generate_trace("generative_agents", N_AGENTS, N_ROUNDS,
+                          cfg.vocab_size, seed=11, jitter_hist=False)
+
+
+def _serve(cfg, params, policy="tokendance", topology=None):
+    eng = ServingEngine(params, cfg, get_policy(policy), topology=topology,
+                        gen_len=GEN, recompute_ratio=0.1, keep_logits=True)
+    return eng, eng.serve(_trace(cfg))
+
+
+# ------------------------------------------------------------- unit level
+def test_allgather_sources_and_groups():
+    topo = AllGather()
+    src = topo.sources(AIDS)
+    assert all(src[a] == (0, 1, 2, 3) for a in AIDS)
+    assert topo.gather_groups(AIDS) == [AIDS]
+
+
+def test_subset_grouped_partitions():
+    topo = SubsetGather.grouped(AIDS, 2)
+    src = topo.sources(AIDS)
+    assert src["agent0"] == src["agent1"] == (0, 1)
+    assert src["agent2"] == src["agent3"] == (2, 3)
+    assert topo.gather_groups(AIDS) == [["agent0", "agent1"],
+                                        ["agent2", "agent3"]]
+    # admission-restricted membership keeps full-roster indices
+    assert topo.gather_groups(AIDS, ["agent0", "agent3"]) == [
+        ["agent0"], ["agent3"]]
+
+
+def test_subset_neighborhood_is_singleton_groups():
+    topo = SubsetGather.neighborhood(AIDS, 1)
+    src = topo.sources(AIDS)
+    assert src["agent0"] == (3, 0, 1)        # ring window, ordered
+    assert src["agent2"] == (1, 2, 3)
+    groups = topo.gather_groups(AIDS)
+    assert [len(g) for g in groups] == [1, 1, 1, 1]
+
+
+def test_group_compatible_consumes_topology():
+    """Same prompt length + cached layout, but different gather sources
+    -> different collective groups (no shared content to align once)."""
+    mask = np.ones(8, bool)
+    reqs = [(a, 8, mask) for a in AIDS]
+    assert group_compatible(reqs) == [AIDS]
+    topo = SubsetGather.grouped(AIDS, 2)
+    assert group_compatible(reqs, topo) == [["agent0", "agent1"],
+                                            ["agent2", "agent3"]]
+    assert group_compatible(reqs, AllGather()) == [AIDS]
+
+
+def test_neighborhood_wrap_dedupes_sources():
+    """A ring window wider than the ring must not insert the same shared
+    block twice into a prompt."""
+    two = SubsetGather.neighborhood(["a", "b"], 1)
+    src = two.sources(["a", "b"])
+    assert src["a"] == (1, 0) and src["b"] == (0, 1)
+    full = SubsetGather.neighborhood(AIDS, 5)   # 2k+1 > n
+    assert all(len(set(t)) == len(t) for t in full.sources(AIDS).values())
+
+
+def test_subset_gather_validates_coverage():
+    topo = SubsetGather.of({"agent0": (0,)})
+    with pytest.raises(AssertionError, match="lacks sources"):
+        topo.sources(AIDS)
+
+
+# ----------------------------------------------------------- engine level
+def test_subset_full_reproduces_allgather_exactly(setup):
+    """Acceptance bar: SubsetGather over the full agent set is the same
+    serving system as AllGather — outputs AND logits bit-equal."""
+    cfg, params = setup
+    _, ref = _serve(cfg, params, topology=None)
+    _, full = _serve(cfg, params, topology=SubsetGather.full(AIDS))
+    for r in range(N_ROUNDS):
+        np.testing.assert_array_equal(ref[r].outputs, full[r].outputs)
+        np.testing.assert_array_equal(ref[r].first_logits,
+                                      full[r].first_logits)
+
+
+def test_grouped_round_forms_per_committee_families(setup):
+    """Committees of 2: shorter prompts (each agent reads 2 blocks, not
+    4), one Master family and one restore ledger per committee."""
+    cfg, params = setup
+    eng, stats = _serve(cfg, params,
+                        topology=SubsetGather.grouped(AIDS, 2))
+    _, ref = _serve(cfg, params, topology=None)
+    last = stats[-1]
+    assert last.outputs.shape == (N_AGENTS, GEN)
+    assert last.prompt_len < ref[-1].prompt_len
+    # one Master family per gather group
+    assert set(eng.policy.masters) == {("agent0", "agent1"),
+                                       ("agent2", "agent3")}
+    # per-group restore + compression ledgers accumulate as lists
+    assert isinstance(last.reuse["restore"], list)
+    assert len(last.reuse["restore"]) == 2
+    for ri in last.reuse["restore"]:
+        assert ri["paged"] and ri["n_restored"] == 2
+    assert len(last.reuse["compression"]) == 2
+    # collective path: ONE align pass per committee, not per agent
+    assert sum(np.atleast_1d(last.reuse["align_passes"])) == 2
+
+
+def test_neighborhood_round_serves_per_agent_groups(setup):
+    """Ring topology: every agent has its own source set, so the round
+    degenerates to per-agent recovery — it must still serve correctly."""
+    cfg, params = setup
+    eng, stats = _serve(cfg, params, policy="pic",
+                        topology=SubsetGather.neighborhood(AIDS, 1))
+    for s in stats:
+        assert s.outputs.shape == (N_AGENTS, GEN)
+    # each agent reads 3 blocks -> shorter prompt than all-gather's 4
+    _, ref = _serve(cfg, params, policy="pic", topology=None)
+    assert stats[-1].prompt_len < ref[-1].prompt_len
