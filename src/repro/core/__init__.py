@@ -14,7 +14,13 @@ from repro.core.diff_store import (
     pack_family,
     similarity_master,
 )
-from repro.core.pic import PICResult, align_cached_keys, n_sel_for, pic_prefill
+from repro.core.pic import (
+    PagedHistory,
+    PICResult,
+    align_cached_keys,
+    n_sel_for,
+    pic_prefill,
+)
 from repro.core.restore import (
     dense_restore,
     dense_restore_paged,

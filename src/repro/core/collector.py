@@ -10,9 +10,12 @@ Diff-Aware Storage (§4.3).
 
 Private histories may arrive PAGED (:class:`PagedPrivate`): a
 family-shared page pool from the §4.4 restore plus per-request page
-tables, gathered inside the collector's jitted pass. That keeps the
-"shared block restored once" property alive through the consumer —
-no dense per-mirror cache is materialized between restore and reuse.
+tables, consumed by the recovery pass WITHOUT densification — each
+layer's attention reads its pages at the point of use (the XLA form of
+``kernels.flash_prefill.flash_prefill_paged_kernel``'s page-table
+BlockSpec). That keeps the "shared block restored once" property alive
+through the attention launch itself; ``_densify_paged`` survives only
+as the parity oracle (and the serial baseline's input form).
 """
 from __future__ import annotations
 
@@ -24,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.pic import PICResult, pic_prefill
+from repro.core.pic import PagedHistory, PICResult, pic_prefill
 
 
 @dataclass
@@ -56,10 +59,12 @@ class PagedPrivate:
     the serving engine restores a Master family with
     ``fused_restore_family_shared`` (Master pages written once, mirror
     diff pages only) and hands the resulting pool + per-request page
-    tables straight to :meth:`KVCollector.collective_reuse`. The gather
-    from pages to the per-request layout happens INSIDE the collector's
-    jitted computation, so no dense ``[L, S, KV, hd]`` private cache is
-    ever materialized on the host per mirror.
+    tables straight to :meth:`KVCollector.collective_reuse`, which
+    passes them into the recovery pass as a
+    :class:`~repro.core.pic.PagedHistory` — each layer's attention reads
+    ``pool[l][page_idx]`` where it consumes it, so no dense
+    ``[L, S, KV, hd]`` private cache is ever materialized, on the host
+    or as a jit intermediate.
 
     Shape/dtype contracts (N requests, prompt length S):
       pool_k/pool_v: float [L, P, bt, KV, hd] — family-shared page pools.
@@ -95,6 +100,40 @@ class PagedPrivate:
     def n_requests(self) -> int:
         return int(self.page_idx.shape[0])
 
+    def identity_span_src(self) -> bool:
+        """True iff the paged span's source positions equal its target
+        positions (``src[:, start+i] == start+i``) — the condition under
+        which pool pages need no RoPE realignment. The serving engine's
+        history layout satisfies this by construction (histories are
+        compressed and restored in-place at prompt position 0)."""
+        span = np.asarray(self.src[:, self.start : self.start + self.span_len])
+        want = np.arange(self.start, self.start + self.span_len,
+                         dtype=span.dtype)
+        return bool(np.array_equal(span, np.broadcast_to(want, span.shape)))
+
+    def fast_path_ok(self) -> bool:
+        """Structural gate for the zero-densify fast path: the span needs
+        no realignment (:meth:`identity_span_src`) AND ``mask`` is True
+        exactly on the span+tail region the fast path writes — the dense
+        oracle applies private values wherever ``mask`` says, the fast
+        path writes ``[start, start + span_len + T)`` unconditionally, so
+        the two are bit-identical only when those coincide. A bundle that
+        fails either check falls back to the jit-level densify oracle
+        (same results, extra data movement). Host-side check on the
+        (host-built) ``src``/``mask`` tables, computed once per bundle —
+        ``collective_reuse`` may be called repeatedly (warm-up + timed)
+        without re-paying the device sync."""
+        cached = self.__dict__.get("_fast_ok")
+        if cached is None:
+            region = np.zeros(np.asarray(self.mask).shape[0], bool)
+            region[self.start : self.start + self.span_len + self.tail_len] \
+                = True
+            cached = (self.span_len > 0
+                      and bool(np.array_equal(np.asarray(self.mask), region))
+                      and self.identity_span_src())
+            self.__dict__["_fast_ok"] = cached
+        return cached
+
     def materialize(self, S: int) -> tuple:
         """Dense parity oracle: ``(pk, pv, psrc, pmask)`` exactly as the
         pre-paged collector consumed them ([N, L, S, KV, hd] etc.).
@@ -111,11 +150,14 @@ def _densify_paged(pool_k, pool_v, page_idx, tail_k, tail_v, *,
                    S: int, start: int, span_len: int):
     """Gather paged private histories into the dense per-request layout
     ``[N, L, S, KV, hd]`` (zeros outside the private span). Pure data
-    movement — no arithmetic — so running it inside or outside jit gives
-    bit-identical values; the collective path runs it inside. The gather
-    itself is :func:`repro.core.restore.gather_pages`, vmapped over
-    requests — one definition of the page→dense layout for the fast path
-    and every oracle."""
+    movement — no arithmetic — so it is bit-identical to the per-layer
+    page reads of the fast path. THE PARITY ORACLE, not the fast path:
+    the collective runner only calls this in ``paged_densify`` mode
+    (``paged_attention=False`` or a span that needs realignment);
+    :meth:`PagedPrivate.materialize` and the serial baseline also go
+    through it. The gather itself is
+    :func:`repro.core.restore.gather_pages`, vmapped over requests —
+    one definition of the page→dense layout for every consumer."""
     from repro.core.restore import gather_pages
 
     L, _, bt, KV, hd = pool_k.shape
@@ -214,39 +256,65 @@ class KVCollector:
           "none"  — no private caches
           "dense" — trailing args (pk [N,L,S,KV,hd], pv, psrc [N,S],
                     pmask [S]) as pre-densified tensors
-          "paged" — trailing args (pool_k [L,P,bt,KV,hd], pool_v,
-                    page_idx [N,nbh], tail_k, tail_v, psrc, pmask); the
-                    page gather runs INSIDE the jitted computation
-                    (``paged_meta = (start, span_len, has_tail)`` are the
-                    static placement params)
+          "paged" — the zero-densify fast path: same trailing args as
+                    below, but the pool + page tables flow into
+                    ``pic_prefill`` as a :class:`PagedHistory` and each
+                    layer's attention reads its pages at the point of
+                    use — no ``_densify_paged``, no dense per-request
+                    private cache anywhere in the jit
+          "paged_densify" — the parity oracle: identical inputs, but the
+                    pages are gathered into dense ``[N, L, S, KV, hd]``
+                    tensors up front (``_densify_paged``) and recovery
+                    runs the dense path. Selected when the fast path's
+                    structural gate fails or ``paged_attention=False``.
+
+        For both paged modes the trailing args are (pool_k
+        [L,P,bt,KV,hd], pool_v, page_idx [N,nbh], [tail_k, tail_v,]
+        psrc, pmask) and ``paged_meta = (start, span_len, has_tail)``
+        are the static placement params.
         """
         key = (S, n_sel, share, priv_mode, paged_meta)
         if key not in self._jit_cache:
             def run(params, tokens, ck, cv, src, shared_mask, *args):
                 pk = pv = psrc = pmask = None
+                hist = None
                 if priv_mode == "dense":
                     pk, pv, psrc, pmask = args
-                elif priv_mode == "paged":
+                elif priv_mode in ("paged", "paged_densify"):
                     start, span_len, has_tail = paged_meta
                     pool_k, pool_v, page_idx = args[:3]
                     tail_k, tail_v = args[3:5] if has_tail else (None, None)
                     psrc, pmask = args[5:] if has_tail else args[3:]
-                    pk, pv = _densify_paged(
-                        pool_k, pool_v, page_idx, tail_k, tail_v,
-                        S=tokens.shape[1], start=start, span_len=span_len)
+                    if priv_mode == "paged":
+                        hist = PagedHistory(
+                            pool_k=pool_k, pool_v=pool_v, page_idx=page_idx,
+                            src=psrc, start=start, span_len=span_len,
+                            tail_k=tail_k, tail_v=tail_v)
+                        psrc = None
+                    else:
+                        pk, pv = _densify_paged(
+                            pool_k, pool_v, page_idx, tail_k, tail_v,
+                            S=tokens.shape[1], start=start, span_len=span_len)
                 return pic_prefill(
                     params, self.cfg, tokens, ck, cv, src, shared_mask,
                     n_sel, priv_k=pk, priv_v=pv, priv_src=psrc,
-                    priv_mask=pmask, check_layer=self.check_layer,
+                    priv_mask=pmask, priv_hist=hist,
+                    check_layer=self.check_layer,
                     pooled_selection=share and self.pooled_selection,
                     block_select=self.block_select, shard=self.shard)
             self._jit_cache[key] = jax.jit(run)
         return self._jit_cache[key]
 
     @staticmethod
-    def _priv_args(priv) -> Tuple[str, tuple, tuple]:
+    def _priv_args(priv, paged_attention: bool = True) -> Tuple[str, tuple, tuple]:
         """(priv_mode, runner args, static paged_meta) for a ``priv`` that
-        is None, a dense tuple, or a :class:`PagedPrivate`."""
+        is None, a dense tuple, or a :class:`PagedPrivate`.
+
+        A ``PagedPrivate`` selects the zero-densify fast path ("paged")
+        when ``paged_attention`` is on AND its structure supports it
+        (:meth:`PagedPrivate.fast_path_ok`); otherwise the jit-level
+        densify oracle ("paged_densify") — bit-identical output either
+        way."""
         if priv is None:
             return "none", (), ()
         if isinstance(priv, PagedPrivate):
@@ -255,7 +323,9 @@ class KVCollector:
             if has_tail:
                 args += (priv.tail_k, priv.tail_v)
             args += (priv.src, priv.mask)
-            return "paged", args, (priv.start, priv.span_len, has_tail)
+            fast = paged_attention and priv.fast_path_ok()
+            return ("paged" if fast else "paged_densify", args,
+                    (priv.start, priv.span_len, has_tail))
         return "dense", tuple(priv), ()
 
     # ------------------------------------------------------------------
@@ -269,6 +339,7 @@ class KVCollector:
         shared_mask: jax.Array,     # [S]
         n_sel: int,
         priv=None,
+        paged_attention: bool = True,
     ) -> CollectiveResult:
         """One collective recovery pass for the whole round group (the T3
         path of Fig. 7): ONE RoPE alignment of the group-shared blocks and
@@ -290,10 +361,18 @@ class KVCollector:
                          * None — no private history,
                          * dense tuple ``(pk [N,L,S,KV,hd], pv,
                            psrc [N,S], pmask [S])``,
-                         * :class:`PagedPrivate` — pool + page tables;
-                           the gather happens inside the jitted pass, so
-                           callers never densify per request (§4.4 page
-                           sharing survives into the consumer).
+                         * :class:`PagedPrivate` — pool + page tables,
+                           consumed WITHOUT densification: the recovery
+                           pass reads ``pool[l][page_idx]`` per layer at
+                           the point each layer's attention needs it
+                           (the XLA form of the paged flash kernel's
+                           page-table BlockSpec), so §4.4's page sharing
+                           survives through the attention launch itself.
+          paged_attention: opt-out knob for the paged fast path. With
+                       ``False`` — or when the span needs realignment
+                       (``identity_span_src`` fails) — a ``PagedPrivate``
+                       is gathered dense inside the jit instead
+                       (``_densify_paged``, the parity oracle).
 
         Returns a :class:`CollectiveResult` whose ``pic`` holds the
         recovered caches ``[L, N, S, KV, hd]`` and last-token logits, and
@@ -304,7 +383,7 @@ class KVCollector:
         """
         N, S = tokens.shape
         self.align_passes += 1
-        priv_mode, args, paged_meta = self._priv_args(priv)
+        priv_mode, args, paged_meta = self._priv_args(priv, paged_attention)
         res = self._runner(S, n_sel, True, priv_mode, paged_meta)(
             self.params, tokens, cached_k, cached_v, src_pos, shared_mask,
             *args)

@@ -51,6 +51,49 @@ from repro.models.transformer import _logits
 BIG = 1.0e30
 
 
+@dataclass
+class PagedHistory:
+    """Private histories handed to :func:`pic_prefill` in PAGED form — the
+    zero-densify dual of the dense ``priv_k``/``priv_v`` inputs.
+
+    The recovery pass consumes the family page pool directly: each
+    layer's base KV is assembled by reading ``pool[l][page_idx]`` at the
+    point the layer's attention/merge needs it, so no ``[B, L, S, ...]``
+    dense private cache ever exists — neither on the host nor as a jit
+    intermediate. This is the XLA form of the paged attention consumer;
+    on a TPU backend the same stream is the Pallas kernel
+    ``kernels.flash_prefill.flash_prefill_paged_kernel`` (page table in
+    the BlockSpec index map).
+
+    Structural contract (the collector gates on it, see
+    ``PagedPrivate.fast_path_ok``): the paged span's source positions
+    equal its target positions — so the pool pages need NO RoPE
+    realignment; the identity rotation is *skipped*, not approximated
+    (bit-exact because rotating by a zero delta is the identity on
+    floats) — and the private mask covers exactly the span+tail region
+    written here. Only the dense decode tail (fresh content with no
+    pages yet) is rotated, an O(T) operation.
+
+    Fields: pools ``[L, P, bt, KV, hd]``; ``page_idx`` int32 [B, nbh];
+    ``src`` int32 [B, S] (used for the tail rotation only);
+    ``start``/``span_len`` static placement of the paged span; tails
+    ``[B, L, T, KV, hd]`` or None.
+    """
+
+    pool_k: jax.Array
+    pool_v: jax.Array
+    page_idx: jax.Array
+    src: jax.Array
+    start: int
+    span_len: int
+    tail_k: Optional[jax.Array] = None
+    tail_v: Optional[jax.Array] = None
+
+    @property
+    def tail_len(self) -> int:
+        return 0 if self.tail_k is None else int(self.tail_k.shape[2])
+
+
 @jax.tree_util.register_dataclass
 @dataclass
 class PICResult:
@@ -143,6 +186,49 @@ def _selective_block(h_sel, p, cfg, *, sel_pos, cos_sel, sin_sel,
     return h_sel, k_merged, v_merged
 
 
+def _paged_base_layer(ph: PagedHistory, aligned_k: jax.Array,
+                      shared_v: jax.Array, B: int, theta: float):
+    """Per-layer base-KV source for a :class:`PagedHistory`.
+
+    Returns ``base_layer(l) -> (k_l [B, S, KV, hd], v_l)`` assembling
+    layer ``l`` from: the group-shared aligned blocks, the paged span
+    read straight out of ``pool[l][page_idx]`` (no rotation — the span's
+    sources are its targets, the structural condition the collector
+    gates on), and the RoPE-realigned dense tail. The full-history
+    densify (``[B, L, S, ...]``) of the pre-paged path never happens;
+    the per-layer read is the same stream the paged flash kernel issues
+    from its BlockSpec index map on TPU.
+    """
+    L, _, bt, KV, hd = ph.pool_k.shape
+    nbh = ph.page_idx.shape[1]
+    T = ph.tail_len
+    s0, ts = ph.start, ph.start + ph.span_len
+    al_tail_k = None
+    if T:
+        # the tail is fresh decode content cached at last round's
+        # positions — the only part of the paged history that rotates
+        tail_tgt = jnp.arange(ts, ts + T, dtype=jnp.int32)
+        al_tail_k = jax.vmap(  # over batch
+            lambda tk, srow: align_cached_keys(tk, srow, tail_tgt, theta)
+        )(ph.tail_k, ph.src[:, ts : ts + T])
+
+    def base_layer(l):
+        k_l = jnp.broadcast_to(aligned_k[l][None], (B,) + aligned_k.shape[1:])
+        v_l = jnp.broadcast_to(shared_v[l][None], k_l.shape)
+        span_k = ph.pool_k[l][ph.page_idx].reshape(
+            B, nbh * bt, KV, hd)[:, : ph.span_len]
+        span_v = ph.pool_v[l][ph.page_idx].reshape(
+            B, nbh * bt, KV, hd)[:, : ph.span_len]
+        k_l = k_l.at[:, s0:ts].set(span_k)
+        v_l = v_l.at[:, s0:ts].set(span_v)
+        if T:
+            k_l = k_l.at[:, ts : ts + T].set(al_tail_k[:, l])
+            v_l = v_l.at[:, ts : ts + T].set(ph.tail_v[:, l])
+        return k_l, v_l
+
+    return base_layer
+
+
 def pic_prefill(
     params: dict,
     cfg: ModelConfig,
@@ -157,6 +243,7 @@ def pic_prefill(
     priv_v: Optional[jax.Array] = None,
     priv_src: Optional[jax.Array] = None,  # [B, S]
     priv_mask: Optional[jax.Array] = None,  # [S] bool
+    priv_hist: Optional[PagedHistory] = None,  # paged dual of priv_k/priv_v
     check_layer: int = 1,
     pooled_selection: bool = False,
     block_select: int = 0,
@@ -175,9 +262,19 @@ def pic_prefill(
     Mirror diffs of Diff-Aware Storage stay block-sparse (paper §4.3's
     clustering assumption made structural). ``n_sel`` must be a multiple
     of ``block_select`` and large enough to cover every fresh-token block.
+
+    Private histories arrive either dense (``priv_k``/``priv_v``) or as
+    a :class:`PagedHistory` (``priv_hist``). The paged form is consumed
+    layer-at-a-time: each layer's base KV reads ``pool[l][page_idx]``
+    exactly where that layer's attention/merge consumes it, so the pages
+    reach attention without a dense per-request private cache ever being
+    materialized. The two forms are bit-identical (pure data movement +
+    a skipped identity rotation).
     """
     assert cfg.has_attention and not cfg.has_ssm, \
         "PIC applies to attention KV caches only (see DESIGN.md §5)"
+    assert priv_k is None or priv_hist is None, \
+        "pass dense priv_k/priv_v OR a PagedHistory, not both"
     B, S = tokens.shape
     L = cfg.n_layers
     theta = cfg.rope_theta
@@ -185,18 +282,29 @@ def pic_prefill(
     is_cached = shared_mask if priv_mask is None else (shared_mask | priv_mask)
 
     # ---- 1. alignment ------------------------------------------------------
-    # shared blocks: ONE rotation for the whole group
+    # shared blocks: ONE rotation for the whole group. ``base_layer(l)``
+    # is the single source of each layer's pre-recovery KV; the dense
+    # path precomputes all layers at once (unchanged behavior), the
+    # paged path assembles one layer at a time from the page pool.
     aligned_k = align_cached_keys(shared_k, shared_src, tgt_pos, theta)
-    base_k = jnp.broadcast_to(aligned_k[:, None], (L, B, S) + aligned_k.shape[-2:])
-    base_v = jnp.broadcast_to(shared_v[:, None], base_k.shape)
-    if priv_k is not None:
-        # private caches: per-request rotation (inherently private work)
-        al_priv = jax.vmap(  # over batch
-            lambda pk, ps: align_cached_keys(pk, ps, tgt_pos, theta)
-        )(priv_k, priv_src)
-        pm = priv_mask[None, None, :, None, None]
-        base_k = jnp.where(pm, jnp.swapaxes(al_priv, 0, 1), base_k)
-        base_v = jnp.where(pm, jnp.swapaxes(priv_v, 0, 1), base_v)
+    if priv_hist is not None:
+        base_layer = _paged_base_layer(
+            priv_hist, aligned_k, shared_v, B, theta)
+    else:
+        base_k = jnp.broadcast_to(
+            aligned_k[:, None], (L, B, S) + aligned_k.shape[-2:])
+        base_v = jnp.broadcast_to(shared_v[:, None], base_k.shape)
+        if priv_k is not None:
+            # private caches: per-request rotation (inherently private)
+            al_priv = jax.vmap(  # over batch
+                lambda pk, ps: align_cached_keys(pk, ps, tgt_pos, theta)
+            )(priv_k, priv_src)
+            pm = priv_mask[None, None, :, None, None]
+            base_k = jnp.where(pm, jnp.swapaxes(al_priv, 0, 1), base_k)
+            base_v = jnp.where(pm, jnp.swapaxes(priv_v, 0, 1), base_v)
+
+        def base_layer(l, _bk=base_k, _bv=base_v):
+            return _bk[l], _bv[l]
 
     # ---- 2. fresh pass over the first check_layer+1 layers ---------------
     h = jnp.take(params["embed"], tokens, axis=0).astype(shared_k.dtype)
@@ -209,8 +317,12 @@ def pic_prefill(
         fresh_v.append(v)
 
     # ---- 3. importance selection on the check layer -----------------------
+    # (the paged path reads the check layer's pages here — a one-layer
+    # streamed read feeding a [B, S] reduction, not a cache copy; XLA
+    # CSEs it with the identical read in the merge loop below)
+    base_chk_k, _ = base_layer(check_layer)
     dk = fresh_k[check_layer].astype(jnp.float32) - \
-        base_k[check_layer].astype(jnp.float32)
+        base_chk_k.astype(jnp.float32)
     deviation = jnp.sum(dk * dk, axis=(-1, -2))            # [B, S]
     deviation = jnp.where(is_cached[None], deviation, 0.0)
     scores = jnp.where(is_cached[None], deviation, BIG)    # fresh always win
@@ -239,31 +351,39 @@ def pic_prefill(
         sel_idx = jnp.sort(idx, axis=-1)
 
     # ---- 4. selective recomputation through the remaining layers ---------
-    rec_k, rec_v = base_k, base_v
+    # one layer at a time: each layer's base KV comes from base_layer(l)
+    # (dense: a precomputed slice; paged: pool pages read at the point of
+    # use), the selected rows are overwritten fresh, and the result both
+    # feeds that layer's attention and becomes the layer's recovered KV
+    rec_ks, rec_vs = [], []
 
     def scatter_rows(base, vals, idx):
         return jax.vmap(lambda b, v_, i: b.at[i].set(v_))(base, vals, idx)
 
     # layers <= check: keep aligned values except at selected rows (fresh)
     for l in range(check_layer + 1):
+        bk_l, bv_l = base_layer(l)
         sel_k = jnp.take_along_axis(
             fresh_k[l], sel_idx[:, :, None, None], axis=1)
         sel_v = jnp.take_along_axis(
             fresh_v[l], sel_idx[:, :, None, None], axis=1)
-        rec_k = rec_k.at[l].set(scatter_rows(rec_k[l], sel_k, sel_idx))
-        rec_v = rec_v.at[l].set(scatter_rows(rec_v[l], sel_v, sel_idx))
+        rec_ks.append(scatter_rows(bk_l, sel_k, sel_idx))
+        rec_vs.append(scatter_rows(bv_l, sel_v, sel_idx))
 
     sel_pos = jnp.take_along_axis(positions, sel_idx, axis=1)  # [B, n_sel]
     cos_sel, sin_sel = rope_cos_sin(sel_pos, cfg.resolved_head_dim, theta)
     h_sel = jnp.take_along_axis(h, sel_idx[:, :, None], axis=1)
 
     for l in range(check_layer + 1, L):
+        bk_l, bv_l = base_layer(l)
         h_sel, k_m, v_m = _selective_block(
             h_sel, _layer(params, l), cfg, sel_pos=sel_pos,
             cos_sel=cos_sel, sin_sel=sin_sel,
-            k_base=rec_k[l], v_base=rec_v[l], sel_idx=sel_idx, shard=shard)
-        rec_k = rec_k.at[l].set(k_m)
-        rec_v = rec_v.at[l].set(v_m)
+            k_base=bk_l, v_base=bv_l, sel_idx=sel_idx, shard=shard)
+        rec_ks.append(k_m)
+        rec_vs.append(v_m)
+    rec_k = jnp.stack(rec_ks)
+    rec_v = jnp.stack(rec_vs)
 
     # ---- 5. last-token logits --------------------------------------------
     is_last = sel_idx == (S - 1)                            # [B, n_sel]

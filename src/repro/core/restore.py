@@ -58,11 +58,15 @@ def gather_pages(pool_k: jax.Array, pool_v: jax.Array, page_idx,
     of the pools ([L, P, bt, KV, hd]) into dense (k, v) of shape
     [L, seq_len, KV, hd].
 
-    THE definition of the page→dense layout: every consumer of a page
-    table (``PagedSegmentCacheEntry.materialize``, the engine's dense
-    oracle branch, and — vmapped inside jit — the collector's
-    ``_densify_paged``) goes through this function, so the paged fast
-    path and the parity oracles cannot drift apart.
+    THE definition of the page→dense layout: every DENSIFYING consumer
+    of a page table (``PagedSegmentCacheEntry.materialize``, the
+    engine's dense oracle branch, and — vmapped inside jit — the
+    collector's ``_densify_paged`` parity oracle) goes through this
+    function. The zero-densify fast path never materializes this layout
+    at all — ``pic_prefill``'s per-layer ``pool[l][page_idx]`` reads and
+    the paged flash kernel's BlockSpec follow the same
+    pages→``[:seq_len]`` rule, and the bit-exactness tests against the
+    oracles are what pin them to it.
     """
     L, _, bt, KV, hd = pool_k.shape
     nbh = int(page_idx.shape[0])

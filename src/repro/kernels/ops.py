@@ -8,6 +8,7 @@ oracle path on CPU for speed, while tests sweep the kernels against it.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +19,10 @@ from repro.kernels.diff_restore import (
     fused_diff_restore_kernel,
     fused_family_restore_kernel,
 )
-from repro.kernels.flash_prefill import flash_prefill_kernel
+from repro.kernels.flash_prefill import (
+    flash_prefill_kernel,
+    flash_prefill_paged_kernel,
+)
 from repro.kernels.rope_align import rope_align_kernel
 
 
@@ -46,17 +50,93 @@ def block_diff(master, mirror, bt: int = 32, use_kernel: bool = True):
 
 
 # --------------------------------------------------------------------------
+def _pad_axis(x, axis: int, target: int):
+    """Zero-pad ``x`` along ``axis`` up to ``target`` length."""
+    if x.shape[axis] == target:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - x.shape[axis])
+    return jnp.pad(x, pad)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "block_q", "block_k", "use_kernel"))
 def flash_prefill(q, k, v, *, causal: bool = True, window: int = 0,
                   block_q: int = 128, block_k: int = 128,
                   use_kernel: bool = True):
-    """Flash attention over [H, S, hd] q and [KV, S, hd] k/v."""
+    """Flash attention over [H, S, hd] q and [KV, S, hd] k/v.
+
+    Ragged S is handled HERE, once: the kernel hard-asserts tile-aligned
+    S, so this wrapper zero-pads q/k/v to the tile, masks the padded KV
+    columns inside the kernel (``kv_len``), and slices the padded query
+    rows off the output. Callers never reimplement the padding. Padding
+    is bit-exact: masked columns score ``-inf`` and contribute exact
+    zeros to the online softmax.
+    """
     if not use_kernel:
         return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
-    return flash_prefill_kernel(
-        q, k, v, causal=causal, window=window,
-        block_q=block_q, block_k=block_k, interpret=_interpret())
+    S = q.shape[1]
+    bq, bk = min(block_q, S), min(block_k, S)
+    Sp = -(-S // math.lcm(bq, bk)) * math.lcm(bq, bk)
+    out = flash_prefill_kernel(
+        _pad_axis(q, 1, Sp), _pad_axis(k, 1, Sp), _pad_axis(v, 1, Sp),
+        causal=causal, window=window, block_q=bq, block_k=bk,
+        kv_len=S if Sp != S else None, interpret=_interpret())
+    return out[:, :S]
+
+
+# --------------------------------------------------------------------------
+def paged_prefill_input_bytes(pool_k, tail_len: int) -> int:
+    """Dense KV bytes :func:`flash_prefill_paged` materializes before its
+    launch: the tail zero-padded to the page tile (k + v), nothing else —
+    the span stays in the pool. Kept NEXT TO the wrapper whose padding
+    rule it mirrors so the two cannot drift silently; the
+    ``prefill_paged.json`` benchmark counts with this, and the
+    zero-densify property itself is pinned by the monkeypatch-spy test
+    in tests/test_paged_collector.py."""
+    P, bt, KV, hd = pool_k.shape
+    t_pad = max(bt, -(-tail_len // bt) * bt)
+    return 2 * t_pad * KV * hd * pool_k.dtype.itemsize
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "span_len", "causal", "window", "block_q", "use_kernel"))
+def flash_prefill_paged(q, pool_k, pool_v, page_idx, tail_k=None, tail_v=None,
+                        *, span_len: int, causal: bool = True, window: int = 0,
+                        block_q: int = 128, use_kernel: bool = True):
+    """Paged flash attention: q [H, S, hd] over KV read straight from a
+    family page pool ([P, bt, KV, hd] + int32 page table [nbh]) with an
+    optional dense decode tail ([T, KV, hd]) as the trailing segment.
+
+    S must equal ``span_len + T``. The KV tile size is the page size
+    ``bt`` (tiles and pages are the same object — that is what lets the
+    BlockSpec index map resolve tile ``j`` to ``pool[page_idx[j]]``).
+    Only the tail (O(T) bytes) and q-row padding are materialized; the
+    span's O(S) bytes stay in the pool and are streamed by the kernel.
+    ``use_kernel=False`` dispatches to the gather-then-attend oracle.
+    """
+    if not use_kernel:
+        return ref.flash_attention_paged_ref(
+            q, pool_k, pool_v, page_idx, tail_k, tail_v,
+            span_len=span_len, causal=causal, window=window)
+    bt = pool_k.shape[1]
+    T = 0 if tail_k is None else tail_k.shape[0]
+    S = q.shape[1]
+    assert S == span_len + T, (S, span_len, T)
+    Tp = max(bt, -(-T // bt) * bt)      # >= one tile so the specs are valid
+    if tail_k is None:
+        tail_k = jnp.zeros((Tp,) + pool_k.shape[2:], pool_k.dtype)
+        tail_v = jnp.zeros((Tp,) + pool_v.shape[2:], pool_v.dtype)
+    else:
+        tail_k = _pad_axis(tail_k, 0, Tp)
+        tail_v = _pad_axis(tail_v, 0, Tp)
+    bq = min(block_q, S)
+    Sp = -(-S // bq) * bq
+    out = flash_prefill_paged_kernel(
+        _pad_axis(q, 1, Sp), pool_k, pool_v, page_idx, tail_k, tail_v,
+        span_len=span_len, tail_len=T, causal=causal, window=window,
+        block_q=bq, interpret=_interpret())
+    return out[:, :S]
 
 
 # --------------------------------------------------------------------------

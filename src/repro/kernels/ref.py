@@ -90,6 +90,32 @@ def block_diff_ref(master: jax.Array, mirror: jax.Array, bt: int) -> jax.Array:
     return d.reshape(L, nb, bt, KV, hd).max(axis=(0, 2, 3, 4))
 
 
+def paged_kv_ref(pool_k, pool_v, page_idx, tail_k, tail_v, span_len: int):
+    """Dense ``[KV, S, hd]`` equivalent of a paged KV stream: gather
+    ``page_idx`` ([nbh] int32) out of the pools ([P, bt, KV, hd]), keep
+    the first ``span_len`` tokens, append the dense tail ([T, KV, hd] or
+    None). This is exactly the materialization the paged kernel avoids —
+    the oracle pays it so the kernel can be checked against it."""
+    P, bt, KV, hd = pool_k.shape
+    nbh = page_idx.shape[0]
+    k = pool_k[page_idx].reshape(nbh * bt, KV, hd)[:span_len]
+    v = pool_v[page_idx].reshape(nbh * bt, KV, hd)[:span_len]
+    if tail_k is not None and tail_k.shape[0]:
+        k = jnp.concatenate([k, tail_k], axis=0)
+        v = jnp.concatenate([v, tail_v], axis=0)
+    return jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0)
+
+
+def flash_attention_paged_ref(q, pool_k, pool_v, page_idx, tail_k, tail_v,
+                              *, span_len, causal=True, window=0, scale=None):
+    """Oracle for kernels.flash_prefill.flash_prefill_paged_kernel:
+    gather pages + tail, then dense flash attention. ``q`` is [H, S, hd]
+    with S == span_len + tail length."""
+    k, v = paged_kv_ref(pool_k, pool_v, page_idx, tail_k, tail_v, span_len)
+    return flash_attention_ref(q, k, v, causal=causal, window=window,
+                               scale=scale)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
     """Oracle for kernels.flash_prefill.
 

@@ -345,12 +345,15 @@ class MultiAgentEngine(ServingEngine):
     construct a policy object."""
 
     def __init__(self, params: dict, cfg: ModelConfig, mode: str, *,
-                 paged_history: bool = True, **kw):
+                 paged_history: bool = True, paged_attention: bool = True,
+                 **kw):
         warnings.warn(
             "MultiAgentEngine(mode=...) is deprecated; pass a ReusePolicy "
             "to ServingEngine (e.g. ServingEngine(params, cfg, "
             "TokenDancePolicy())) instead.",
             DeprecationWarning, stacklevel=2)
         assert mode in MODES, mode
-        policy_kw = {"paged_history": paged_history} if mode == "tokendance" else {}
+        policy_kw = ({"paged_history": paged_history,
+                      "paged_attention": paged_attention}
+                     if mode == "tokendance" else {})
         super().__init__(params, cfg, get_policy(mode, **policy_kw), **kw)

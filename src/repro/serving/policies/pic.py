@@ -40,6 +40,10 @@ class PICPolicy(ReusePolicy):
     requires_attention = True
     #: subclasses flip this to drive ONE grouped pass per round
     collective = False
+    #: collective paged histories reach attention without densification
+    #: (see KVCollector.collective_reuse); TokenDancePolicy exposes the
+    #: oracle opt-out for parity testing
+    paged_attention = True
 
     # ------------------------------------------------------------- plan
     def plan(self, ctx: RoundContext) -> RecoveryPlan:
@@ -167,15 +171,17 @@ class PICPolicy(ReusePolicy):
             priv = priv.materialize(S)
 
         if self.collective:
-            key = ("coll", N, S, n_sel)
+            key = ("coll", N, S, n_sel, self.paged_attention)
             if key not in rt.warm:
                 rt.collector.collective_reuse(
-                    aids, tokens, sk, sv, src, smask, n_sel, priv)
+                    aids, tokens, sk, sv, src, smask, n_sel, priv,
+                    paged_attention=self.paged_attention)
                 rt.warm.add(key)
             p0 = rt.collector.align_passes
             t0 = time.perf_counter()
             res = rt.collector.collective_reuse(
-                aids, tokens, sk, sv, src, smask, n_sel, priv)
+                aids, tokens, sk, sv, src, smask, n_sel, priv,
+                paged_attention=self.paged_attention)
             jax.block_until_ready(res.pic.recovered_k)
             dt = time.perf_counter() - t0
             k = res.pic.recovered_k                        # [L, N, S, KV, hd]

@@ -30,11 +30,18 @@ class TokenDancePolicy(PICPolicy):
 
     ``paged_history=True`` (default) keeps restored mirror histories
     PAGED through the collector — the family restore's page pool +
-    per-agent page tables flow into ``collective_reuse`` and the gather
-    happens inside the recovery jit, so no dense per-mirror cache is
-    materialized between restore and reuse. ``False`` selects the dense
+    per-agent page tables flow into ``collective_reuse``, and the
+    recovery pass reads the pages per layer at the point its attention
+    consumes them, so no dense per-mirror cache is materialized between
+    restore and the attention launch. ``False`` selects the dense
     oracle path (per-mirror host gather), kept for parity testing and as
     the reference the paged path must match bit-for-bit.
+
+    ``paged_attention=True`` (default) is the second half of that
+    contract: it selects the collector's zero-densify fast path.
+    ``False`` keeps the histories paged up to the collector but gathers
+    them dense INSIDE the recovery jit (``_densify_paged``, the parity
+    oracle) — outputs are bit-identical, only the data movement differs.
 
     One Master family per gather group: ``masters`` is keyed by the
     group's member tuple, so grouped/neighborhood topologies compress
@@ -43,9 +50,11 @@ class TokenDancePolicy(PICPolicy):
 
     collective = True
 
-    def __init__(self, paged_history: bool = True) -> None:
+    def __init__(self, paged_history: bool = True,
+                 paged_attention: bool = True) -> None:
         super().__init__()
         self.paged_history = paged_history
+        self.paged_attention = paged_attention
         self.masters: Dict[tuple, MasterCache] = {}
 
     # ---------------------------------------------------------- restore

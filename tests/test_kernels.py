@@ -8,7 +8,10 @@ import pytest
 from repro.kernels import ops, ref
 from repro.kernels.block_diff import block_diff_kernel
 from repro.kernels.diff_restore import fused_diff_restore_kernel
-from repro.kernels.flash_prefill import flash_prefill_kernel
+from repro.kernels.flash_prefill import (
+    flash_prefill_kernel,
+    flash_prefill_paged_kernel,
+)
 from repro.kernels.rope_align import rope_align_kernel
 
 RNG = np.random.default_rng(42)
@@ -100,6 +103,122 @@ def test_flash_prefill_blocks_shapes():
                                    interpret=True)
         exp = ref.flash_attention_ref(q, k, v)
         np.testing.assert_allclose(got, exp, atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------ flash_prefill_paged
+def _paged_attn_case(nbh, bt, KV, hd, T, *, n_extra_pages=3, dtype=jnp.float32,
+                     seed=0, share_from=None):
+    """A pool + page table (+ dense tail) and the q to attend with.
+
+    ``share_from`` aliases a prefix of the table to another table's pages
+    (the family case: clean mirror blocks point at Master pages)."""
+    rng = np.random.default_rng(seed)
+    P = nbh + n_extra_pages
+    pool_k = _rand((P, bt, KV, hd), dtype)
+    pool_v = _rand((P, bt, KV, hd), dtype)
+    pidx = np.asarray(rng.permutation(P)[:nbh], np.int32)
+    if share_from is not None:
+        pidx[: nbh // 2] = share_from[: nbh // 2]
+    span = nbh * bt
+    q = _rand((4, span + T, hd), dtype)
+    tail_k = _rand((T, KV, hd), dtype) if T else None
+    tail_v = _rand((T, KV, hd), dtype) if T else None
+    return q, pool_k, pool_v, jnp.asarray(pidx), tail_k, tail_v, span
+
+
+@pytest.mark.parametrize("nbh,bt,KV,hd,T", [
+    (4, 32, 2, 64, 32),     # GQA H=4 != KV=2, tail
+    (2, 32, 4, 32, 0),      # zero-length tail, H == KV
+    (1, 64, 1, 128, 64),    # single page (M=1-style table)
+])
+@pytest.mark.parametrize("window", [0, 100])
+def test_flash_prefill_paged_bitexact_vs_dense(nbh, bt, KV, hd, T, window):
+    """On shared tile boundaries (aligned span, bk == page size) the
+    paged kernel must equal the dense kernel on the gathered KV
+    BIT-FOR-BIT: paging changes where a tile is fetched from, never what
+    is computed on it."""
+    q, pk, pv, pidx, tk, tv, span = _paged_attn_case(nbh, bt, KV, hd, T)
+    got = ops.flash_prefill_paged(q, pk, pv, pidx, tk, tv, span_len=span,
+                                  window=window, block_q=64)
+    kd, vd = ref.paged_kv_ref(pk, pv, pidx, tk, tv, span)
+    dense = ops.flash_prefill(q, kd, vd, window=window, block_q=64,
+                              block_k=bt)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(dense))
+
+
+@pytest.mark.parametrize("span_off,T", [(0, 32), (-5, 32), (-5, 13), (0, 13)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill_paged_ragged_sweep(span_off, T, dtype):
+    """Ragged span lengths (last page partially valid) and ragged tails
+    against the gather-then-attend oracle."""
+    nbh, bt, KV, hd = 3, 32, 2, 64
+    q, pk, pv, pidx, tk, tv, span = _paged_attn_case(
+        nbh, bt, KV, hd, T, dtype=dtype, seed=3)
+    span = span + span_off
+    S = span + T
+    q = q[:, :S]
+    got = ops.flash_prefill_paged(q, pk, pv, pidx, tk, tv, span_len=span,
+                                  block_q=64)
+    exp = ref.flash_attention_paged_ref(q, pk, pv, pidx, tk, tv,
+                                        span_len=span)
+    np.testing.assert_allclose(np.float32(got), np.float32(exp), **_tol(dtype))
+
+
+def test_flash_prefill_paged_page_aliasing():
+    """Family aliasing: a mirror table that shares the Master's pages on
+    its clean blocks attends over the Master's values there — same pool,
+    two tables, outputs tracking the respective gathers."""
+    nbh, bt, KV, hd, T = 4, 32, 2, 64, 32
+    q, pk, pv, master_idx, tk, tv, span = _paged_attn_case(
+        nbh, bt, KV, hd, T, seed=5)
+    _, _, _, mirror_idx, _, _, _ = _paged_attn_case(
+        nbh, bt, KV, hd, T, seed=6, share_from=np.asarray(master_idx))
+    for pidx in (master_idx, mirror_idx):
+        got = ops.flash_prefill_paged(q, pk, pv, pidx, tk, tv, span_len=span)
+        kd, vd = ref.paged_kv_ref(pk, pv, pidx, tk, tv, span)
+        np.testing.assert_array_equal(
+            np.asarray(got),
+            np.asarray(ops.flash_prefill(q, kd, vd, block_k=bt)))
+    # the shared prefix notwithstanding, differing diff pages must show
+    assert not np.array_equal(np.asarray(master_idx), np.asarray(mirror_idx))
+
+
+def test_flash_prefill_paged_kernel_direct():
+    """The raw kernel (no ops wrapper) with pre-padded operands."""
+    nbh, bt, KV, hd, T = 2, 32, 2, 64, 32
+    q, pk, pv, pidx, tk, tv, span = _paged_attn_case(nbh, bt, KV, hd, T,
+                                                     seed=8)
+    got = flash_prefill_paged_kernel(
+        q, pk, pv, pidx, tk, tv, span_len=span, tail_len=T,
+        block_q=32, interpret=True)
+    exp = ref.flash_attention_paged_ref(q, pk, pv, pidx, tk, tv,
+                                        span_len=span)
+    np.testing.assert_allclose(np.float32(got), np.float32(exp),
+                               **_tol(jnp.float32))
+
+
+# ------------------------------------------------- flash_prefill ragged S
+@pytest.mark.parametrize("S", [100, 200, 257])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 50)])
+def test_flash_prefill_ragged_S_wrapper(S, causal, window):
+    """ops.flash_prefill pads ragged S to the tile, masks the padded KV
+    columns and slices the padded rows — callers never pad by hand."""
+    q = _rand((4, S, 64), jnp.float32)
+    k = _rand((2, S, 64), jnp.float32)
+    v = _rand((2, S, 64), jnp.float32)
+    got = ops.flash_prefill(q, k, v, causal=causal, window=window)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    assert got.shape == exp.shape
+    np.testing.assert_allclose(np.float32(got), np.float32(exp),
+                               **_tol(jnp.float32))
+
+
+def test_flash_prefill_kernel_still_asserts_ragged():
+    """The raw kernel keeps its tile-alignment contract; the wrapper is
+    the one place that pads."""
+    q = _rand((2, 200, 64), jnp.float32)
+    with pytest.raises(AssertionError, match="pad S"):
+        flash_prefill_kernel(q, q, q, interpret=True)
 
 
 # --------------------------------------------------------- fused_diff_restore

@@ -167,6 +167,88 @@ def test_collective_paged_no_tail(setup):
     _assert_results_equal(res_p.pic, res_d.pic)
 
 
+def test_fast_path_never_densifies(setup, monkeypatch):
+    """THE grep-able acceptance bar of ISSUE 5: on the fast path a
+    PagedPrivate reaches attention with NO call to ``_densify_paged`` —
+    neither on the host nor inside the jitted recovery pass. The oracle
+    opt-out (``paged_attention=False``) must still go through it."""
+    import repro.core.collector as collector_mod
+    cfg, params = setup
+    calls = []
+    orig = collector_mod._densify_paged
+
+    def spy(*args, **kw):
+        calls.append(1)
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(collector_mod, "_densify_paged", spy)
+    (tokens, sk, sv, src, smask, n_sel, priv, S) = _paged_group(
+        cfg, 3, diff_counts=[1, 2], seed=21)
+    ids = ["a0", "a1", "a2"]
+    coll = KVCollector(params, cfg, block_select=BT, recompute_ratio=0.15)
+    res_fast = coll.collective_reuse(ids, tokens, sk, sv, src, smask,
+                                     n_sel, priv)
+    assert not calls, "fast path called _densify_paged"
+    res_oracle = coll.collective_reuse(ids, tokens, sk, sv, src, smask,
+                                       n_sel, priv, paged_attention=False)
+    assert calls, "oracle path must keep _densify_paged alive"
+    _assert_results_equal(res_fast.pic, res_oracle.pic)
+
+
+def test_paged_attention_oracle_parity(setup):
+    """Three-way bit-exact: zero-densify fast path == jit-level densify
+    oracle == pre-densified dense tuple."""
+    cfg, params = setup
+    (tokens, sk, sv, src, smask, n_sel, priv, S) = _paged_group(
+        cfg, 4, diff_counts=[0, 2, 1], seed=23)
+    ids = [f"a{i}" for i in range(4)]
+    coll = KVCollector(params, cfg, block_select=BT, recompute_ratio=0.15)
+    fast = coll.collective_reuse(ids, tokens, sk, sv, src, smask, n_sel,
+                                 priv)
+    oracle = coll.collective_reuse(ids, tokens, sk, sv, src, smask, n_sel,
+                                   priv, paged_attention=False)
+    dense = coll.collective_reuse(ids, tokens, sk, sv, src, smask, n_sel,
+                                  priv.materialize(S))
+    _assert_results_equal(fast.pic, oracle.pic)
+    _assert_results_equal(fast.pic, dense.pic)
+
+
+def test_non_identity_src_falls_back_to_oracle(setup):
+    """A PagedPrivate whose span needs RoPE realignment fails the fast
+    path's structural gate and is routed through the densify oracle —
+    results must still match the dense tuple exactly."""
+    cfg, params = setup
+    (tokens, sk, sv, src, smask, n_sel, priv, S) = _paged_group(
+        cfg, 3, diff_counts=[1, 1], seed=25)
+    shifted = np.asarray(priv.src).copy()
+    shifted[:, : priv.span_len] += 7          # span cached at other positions
+    priv2 = PagedPrivate(
+        pool_k=priv.pool_k, pool_v=priv.pool_v, page_idx=priv.page_idx,
+        src=jnp.asarray(shifted), mask=priv.mask, start=0,
+        span_len=priv.span_len, tail_k=priv.tail_k, tail_v=priv.tail_v)
+    assert not priv2.identity_span_src()
+    assert KVCollector._priv_args(priv2)[0] == "paged_densify"
+    assert KVCollector._priv_args(priv)[0] == "paged"
+    # a mask that disagrees with the span+tail placement also fails the
+    # gate (the fast path writes the region unconditionally; the oracle
+    # honors the mask — they only coincide when the two match)
+    short_mask = np.asarray(priv.mask).copy()
+    short_mask[priv.span_len :] = False       # drops the tail region
+    priv3 = PagedPrivate(
+        pool_k=priv.pool_k, pool_v=priv.pool_v, page_idx=priv.page_idx,
+        src=priv.src, mask=jnp.asarray(short_mask), start=0,
+        span_len=priv.span_len, tail_k=priv.tail_k, tail_v=priv.tail_v)
+    assert priv3.identity_span_src() and not priv3.fast_path_ok()
+    assert KVCollector._priv_args(priv3)[0] == "paged_densify"
+    ids = ["a0", "a1", "a2"]
+    coll = KVCollector(params, cfg, block_select=BT, recompute_ratio=0.15)
+    res_p = coll.collective_reuse(ids, tokens, sk, sv, src, smask, n_sel,
+                                  priv2)
+    res_d = coll.collective_reuse(ids, tokens, sk, sv, src, smask, n_sel,
+                                  priv2.materialize(S))
+    _assert_results_equal(res_p.pic, res_d.pic)
+
+
 def test_serial_paged_equals_dense(setup):
     """The serial baseline accepts PagedPrivate by densifying up front —
     results must match passing the dense tuple directly."""
@@ -211,18 +293,19 @@ GEN = 32
 
 
 def _run_engine(cfg, params, *, paged, n_agents=N_AGENTS, n_rounds=N_ROUNDS,
-                spy=None):
+                spy=None, paged_attention=True):
     trace = generate_trace("generative_agents", n_agents, n_rounds,
                            cfg.vocab_size, seed=11, jitter_hist=False)
     eng = MultiAgentEngine(params, cfg, "tokendance", gen_len=GEN,
                            recompute_ratio=0.1, keep_recovered=True,
-                           paged_history=paged)
+                           paged_history=paged,
+                           paged_attention=paged_attention)
     if spy is not None:
         orig = eng.collector.collective_reuse
 
-        def wrapped(ids, tokens, ck, cv, src, mask, n_sel, priv=None):
+        def wrapped(ids, tokens, ck, cv, src, mask, n_sel, priv=None, **kw):
             spy.append(type(priv).__name__)
-            return orig(ids, tokens, ck, cv, src, mask, n_sel, priv)
+            return orig(ids, tokens, ck, cv, src, mask, n_sel, priv, **kw)
 
         eng.collector.collective_reuse = wrapped
     return eng, eng.run_trace(trace)
@@ -275,6 +358,25 @@ def test_engine_accounts_shared_pages_once(engines):
     assert ri["pool_pages"] <= ri["full_write_pages"]
     assert ri["pool_pages"] >= ri["nb"]   # master share counted once
     assert ri["bytes_materialized"] < rd["bytes_materialized"]
+
+
+def test_engine_paged_attention_on_off_bitexact(setup, engines):
+    """ISSUE 5 engine-level check: TokenDancePolicy outputs are unchanged
+    with the paged attention fast path on vs off (the off leg keeps
+    histories paged to the collector but densifies inside the jit)."""
+    cfg, params = setup
+    eng_on, stats_on, _, _, _ = engines   # paged_attention=True default
+    eng_off, stats_off = _run_engine(cfg, params, paged=True,
+                                     paged_attention=False)
+    assert eng_on.policy.paged_attention is True
+    assert eng_off.policy.paged_attention is False
+    for r in range(N_ROUNDS):
+        np.testing.assert_array_equal(stats_on[r].outputs,
+                                      stats_off[r].outputs)
+    np.testing.assert_array_equal(eng_on.last_recovered[0],
+                                  eng_off.last_recovered[0])
+    np.testing.assert_array_equal(eng_on.last_recovered[1],
+                                  eng_off.last_recovered[1])
 
 
 def test_engine_single_agent_paged(setup):

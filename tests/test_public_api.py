@@ -57,6 +57,7 @@ CORE_API = {
     "similarity_master",
     # pic
     "PICResult",
+    "PagedHistory",     # paged attention consumer (ISSUE 5)
     "align_cached_keys",
     "n_sel_for",
     "pic_prefill",
