@@ -302,7 +302,8 @@ def family_pool_pages(handles) -> int:
 
 def fused_restore_family_shared(handles, pool_k: Optional[jax.Array] = None,
                                 pool_v: Optional[jax.Array] = None, *,
-                                master_map=None, diff_maps=None):
+                                master_map=None, diff_maps=None,
+                                n_pages: Optional[int] = None):
     """Page-sharing family restore for aligned frames (in-family mirrors).
 
     Writes the Master's ``nb`` pages once and each mirror's diff rows to
@@ -329,6 +330,9 @@ def fused_restore_family_shared(handles, pool_k: Optional[jax.Array] = None,
     rule themselves (jit silently drops out-of-bounds scatters, so an
     undersized pool corrupts restored KV without an error; a provided
     pool is checked against the maps for exactly that reason).
+    ``n_pages`` (only with a fresh pool) sizes it explicitly — the pool
+    manager hands its page grant here so the restore writes into exactly
+    the pages the ledger accounts; it must cover the map addresses.
     """
     from repro.core.diff_store import pack_family
 
@@ -352,11 +356,15 @@ def fused_restore_family_shared(handles, pool_k: Optional[jax.Array] = None,
     diff_maps = np.asarray(diff_maps, np.int32)
     n_addr = int(max(master_map.max(), diff_maps.max())) + 1
     if pool_k is None:
+        if n_pages is not None:
+            assert n_pages >= n_addr, \
+                (n_pages, n_addr, "n_pages smaller than the page maps "
+                 "address — size the grant with family_pool_pages()")
         pool_k, pool_v = _shared_build(
             mk.reshape(L, nb, bt, KV, hd), mv.reshape(L, nb, bt, KV, hd),
             pack.diff_k, pack.diff_v,
             jnp.asarray(master_map), jnp.asarray(diff_maps),
-            n_pages=n_addr)
+            n_pages=n_addr if n_pages is None else int(n_pages))
     else:
         assert pool_k.shape[1] >= n_addr and pool_v.shape[1] >= n_addr, \
             (pool_k.shape, pool_v.shape,

@@ -1,6 +1,17 @@
 from repro.serving.engine import MODES, MultiAgentEngine, ServingEngine
 from repro.serving.kvpool import Allocation, PagedKVPool, PoolExhausted
 from repro.serving.planner import RoundPlan, RoundPlanner
+from repro.serving.pool import (
+    EvictionPolicy,
+    FamilyCostAware,
+    HostTier,
+    LRUByRound,
+    PoolLedger,
+    PoolManager,
+    PrefetchPlanner,
+    Spillable,
+    get_eviction_policy,
+)
 from repro.serving.policies import (
     POLICIES,
     PICPolicy,
@@ -54,4 +65,14 @@ __all__ = [
     "Allocation",
     "PagedKVPool",
     "PoolExhausted",
+    # tiered pool manager (ISSUE 6)
+    "EvictionPolicy",
+    "FamilyCostAware",
+    "HostTier",
+    "LRUByRound",
+    "PoolLedger",
+    "PoolManager",
+    "PrefetchPlanner",
+    "Spillable",
+    "get_eviction_policy",
 ]

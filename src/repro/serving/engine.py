@@ -46,6 +46,7 @@ from repro.core.segments import PromptLayout, SegmentIndex
 from repro.models import decode_step
 from repro.serving.kvpool import PagedKVPool
 from repro.serving.planner import RoundPlan, RoundPlanner
+from repro.serving.pool import HostTier, PoolManager
 from repro.serving.policies import (
     PolicyRuntime,
     ReusePolicy,
@@ -72,6 +73,8 @@ class ServingEngine:
         block_select: int = 32,
         check_layer: int = 1,
         pool_pages: int = 1 << 16,
+        eviction="family",
+        host_offload: bool = True,
         keep_recovered: bool = False,
         keep_logits: bool = False,
     ):
@@ -92,6 +95,13 @@ class ServingEngine:
         self.sessions: Dict[str, Session] = {}
         self.segment_index = SegmentIndex()
         self.pool = PagedKVPool(cfg, pool_pages)
+        # tiered layer over the pool: family-aware eviction + host
+        # offload + restore-ahead prefetch. host_offload=False disables
+        # the host tier (capacity 0), reproducing the hard-wall
+        # PoolExhausted behavior of a plain pool.
+        self.manager = PoolManager(
+            self.pool, eviction=eviction,
+            host=HostTier(None if host_offload else 0))
         self.keep_recovered = keep_recovered
         # record per-round first-token logits on RoundStats (host copy of
         # [N, vocab] per round — parity-test food, off by default)
@@ -105,12 +115,13 @@ class ServingEngine:
             params=params, cfg=cfg, gen_len=gen_len, ratio=recompute_ratio,
             block_select=block_select, sep_id=self.sep_id,
             sessions=self.sessions, segment_index=self.segment_index,
-            pool=self.pool, collector=self.collector)
+            pool=self.pool, manager=self.manager, collector=self.collector)
         policy.bind(self.rt)
         self.policy = policy
         self.mode = policy.name          # legacy-facing alias
         self.round_idx = 0
         self.last_outputs: Dict[str, np.ndarray] = {}
+        self._prefetch_pending: List[str] = []
 
     # ------------------------------------------------------------------
     def init_agents(self, trace: AllGatherTrace) -> None:
@@ -195,7 +206,8 @@ class ServingEngine:
         return np.stack([np.asarray(t) for t in outs], axis=1), cache, dt
 
     # ------------------------------------------------------------------
-    def run_round(self, rnd: Round, plan: Optional[RoundPlan] = None) -> RoundStats:
+    def run_round(self, rnd: Round, plan: Optional[RoundPlan] = None,
+                  next_plan: Optional[RoundPlan] = None) -> RoundStats:
         # generate mode: use previous outputs as this round's shared blocks.
         # Agents that have not produced yet (deferred by admission since
         # round 0) contribute their trace replay block instead.
@@ -213,6 +225,16 @@ class ServingEngine:
                     else [a for a in plan.admitted if a in self.sessions])
         topology = (plan.topology if plan is not None and plan.topology
                     else self.topology)
+        self.manager.begin_round(self.round_idx)
+        ledger_before = self.manager.ledger.snapshot()
+        # restore-ahead: round r+1's admission plan names the owners its
+        # restores will read; reload them while round r decodes. Agents
+        # admitted THIS round are excluded — their family state is
+        # re-formed by this round's store() anyway.
+        self._prefetch_pending = (
+            [] if next_plan is None else
+            self.manager.prefetch_planner.owners_for(
+                self.sessions, next_plan.admitted, exclude=admitted))
         stats = RoundStats(self.round_idx, self.policy.name, len(admitted), 0)
         if plan is not None:
             stats.admission = {
@@ -247,8 +269,14 @@ class ServingEngine:
                                    if len(self._recovered_parts) == 1
                                    else self._recovered_parts)
         stats.transient_peak_bytes = self.pool.peak_bytes()
-        self.pool.free_transient()
+        self.manager.free_transient()
+        if self._prefetch_pending:   # retry now that transients are free
+            self.manager.prefetch(self._prefetch_pending)
+            self._prefetch_pending = []
         stats.persistent_bytes = self._persistent_bytes()
+        pool_delta = self.manager.ledger.delta(ledger_before)
+        if pool_delta:
+            stats.merge_reuse("pool", pool_delta)
         self.round_idx += 1
         return stats
 
@@ -284,11 +312,19 @@ class ServingEngine:
         # transient working set: N dense caches of S+G tokens (the restore
         # pool allocated during plan() is reclaimed here, after its peak
         # registered — same accounting order as the pre-policy engine)
-        self.pool.free_transient()
+        self.manager.free_transient()
         for a in gaids:
-            self.pool.free(f"round:{a}")
-            self.pool.alloc_tokens(f"round:{a}", S + self.gen_len,
-                                   persistent=False)
+            self.manager.free(f"round:{a}")
+            self.manager.alloc_tokens(f"round:{a}", S + self.gen_len,
+                                      persistent=False)
+
+        # restore-ahead prefetch for round r+1, overlapped with decode
+        # (fires once per round, on the first group to reach this point;
+        # owners that don't fit beside the live transients stay pending
+        # and are retried at round end, after free_transient)
+        if self._prefetch_pending:
+            self._prefetch_pending = self.manager.prefetch(
+                self._prefetch_pending)
 
         # ---- phase C: decode --------------------------------------------
         outputs, cache, dt_dec = self._decode(res.logits, res.cache, N, S)
@@ -319,14 +355,34 @@ class ServingEngine:
               planner: Optional[RoundPlanner] = None,
               n_rounds: Optional[int] = None) -> List[RoundStats]:
         """Serve a trace: one :meth:`run_round` per round, each preceded
-        by the planner's admission decision (admit-all when absent)."""
+        by the planner's admission decision (admit-all when absent).
+
+        The plan for round r+1 is computed while round r is still
+        current (one ``plan_round`` call per round, in round order — the
+        admission rotation is identical to planning lazily) and handed
+        to :meth:`run_round` as ``next_plan`` so the pool manager can
+        prefetch the owners round r+1's restores will read. Observed
+        round stats feed :meth:`RoundPlanner.observe` *after* the
+        lookahead plan for that round exists, so a measurement refit
+        takes effect two rounds later.
+        """
         if not self.sessions:
             self.init_agents(trace)
+        rounds = trace.rounds[: n_rounds or len(trace.rounds)]
         out = []
-        for rnd in trace.rounds[: n_rounds or len(trace.rounds)]:
-            plan = (None if planner is None else
-                    planner.plan_round(self.round_idx, list(self.sessions)))
-            out.append(self.run_round(rnd, plan))
+        plan = (None if planner is None or not rounds else
+                planner.plan_round(self.round_idx, list(self.sessions)))
+        for i, rnd in enumerate(rounds):
+            next_plan = (None if planner is None or i + 1 >= len(rounds) else
+                         planner.plan_round(self.round_idx + 1,
+                                            list(self.sessions)))
+            stats = self.run_round(rnd, plan, next_plan=next_plan)
+            out.append(stats)
+            if planner is not None:
+                planner.observe(
+                    stats, collective=getattr(self.policy, "collective",
+                                              self.policy.name == "tokendance"))
+            plan = next_plan
         return out
 
     def run_trace(self, trace: AllGatherTrace,

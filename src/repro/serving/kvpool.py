@@ -26,6 +26,9 @@ class Allocation:
     owner: str
     pages: np.ndarray        # int32 page ids
     persistent: bool         # survives the round (agent state) or not
+    #: set once the pages went back to the free list; a stale Allocation
+    #: object can then never return them a second time (double-free guard)
+    released: bool = False
 
     @property
     def n_pages(self) -> int:
@@ -88,10 +91,16 @@ class PagedKVPool:
         histories, Diff-Aware Storage); ``False`` marks round-transient
         working sets that :meth:`free_transient` reclaims in bulk.
         Raises :class:`PoolExhausted` when the pool cannot satisfy the
-        request — the engine treats that as a preemption/swap event.
-        Re-allocating an existing owner without freeing first leaks the
-        old pages; call :meth:`free` first (engine convention).
+        request — the engine treats that as a preemption/swap event —
+        and :class:`ValueError` when ``owner`` is still live: silently
+        replacing a live allocation would leak its pages, so callers
+        must :meth:`free` first.
         """
+        if owner in self._allocs:
+            raise ValueError(
+                f"owner {owner!r} is still allocated "
+                f"({self._allocs[owner].n_pages} pages); free() it first — "
+                f"re-allocating a live owner would leak its pages")
         if len(self._free) < n_pages:
             raise PoolExhausted(
                 f"{owner}: need {n_pages}, free {len(self._free)}/{self.n_pages}")
@@ -111,7 +120,23 @@ class PagedKVPool:
         """Return ``owner``'s pages to the free list (no-op if absent)."""
         a = self._allocs.pop(owner, None)
         if a is not None:
-            self._free.extend(int(p) for p in a.pages)
+            self._release(a)
+
+    def _release(self, a: Allocation) -> None:
+        """Return an allocation's pages exactly once. A stale
+        :class:`Allocation` (already released, e.g. kept across a
+        free+alloc of the same owner) raises instead of corrupting the
+        free list with duplicate page ids."""
+        if a.released:
+            raise ValueError(
+                f"double free of {a.owner!r}: its pages were already "
+                f"returned to the free list")
+        a.released = True
+        self._free.extend(int(p) for p in a.pages)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
 
     def free_transient(self) -> None:
         """Reclaim every non-persistent allocation — the engine calls this

@@ -10,16 +10,22 @@ gather) but do not run this round — the admission-control analogue of
 the paper's Fig. 10 capacity ceiling.
 
 ``ServingEngine.serve(trace, planner)`` drives one ``plan_round`` per
-round and records the decision on ``RoundStats.admission``.
+round, records the decision on ``RoundStats.admission``, and feeds each
+served round's stats back through :meth:`RoundPlanner.observe` — with
+``refit_every`` set, the capacity model is re-fit from measurement
+(:func:`~repro.serving.scheduler.service_times_from_stats`) instead of
+staying a static a-priori guess.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from types import SimpleNamespace
 from typing import Callable, List, Optional, Sequence
 
 from repro.core.rounds import GatherTopology
-from repro.serving.scheduler import ServiceTimes, max_agents_under_slo
+from repro.serving.scheduler import (ServiceTimes, max_agents_under_slo,
+                                     service_times_from_stats)
 
 
 @dataclass
@@ -48,6 +54,9 @@ class RoundPlanner:
       agent_range       — candidate agent counts for the SLO search
                           (default ``1..n_agents``).
       pool_budget_bytes — KV pool budget for the memory-fallback term.
+      refit_every       — re-fit ``measure`` from observed round stats
+                          every this many :meth:`observe` calls (0 =
+                          never; the initial model is kept verbatim).
 
     Admission is ROUND-ROBIN fair: a rotating cursor advances by the cap
     each planned round, so under a stable cap every agent is served
@@ -59,13 +68,17 @@ class RoundPlanner:
                  measure: Optional[Callable[[int], ServiceTimes]] = None,
                  qps: float = 0.0, slo_s: float = math.inf,
                  agent_range: Optional[Sequence[int]] = None,
-                 pool_budget_bytes: float = 0.0):
+                 pool_budget_bytes: float = 0.0,
+                 refit_every: int = 0):
         self.topology = topology
         self.measure = measure
         self.qps = qps
         self.slo_s = slo_s
         self.agent_range = agent_range
         self.pool_budget_bytes = pool_budget_bytes
+        self.refit_every = refit_every
+        self.refits = 0           # times observe() replaced the model
+        self._obs: List[object] = []
         self._cursor = 0          # round-robin start of the admitted slice
 
     @property
@@ -88,3 +101,38 @@ class RoundPlanner:
         self._cursor = (start + n_adm) % len(aids) if aids else 0
         deferred = [a for a in aids if a not in admitted]
         return RoundPlan(round_idx, admitted, deferred, cap, self.topology)
+
+    def observe(self, stats, *, collective: bool,
+                recompute_round: float = 0.0) -> None:
+        """Feed one served round's measured ``RoundStats`` back into the
+        capacity model.
+
+        Closes the measure→admit loop: with ``refit_every=k > 0``, every
+        k observed rounds the (possibly modeled) ``measure`` callable is
+        replaced by :func:`service_times_from_stats` over the mean of
+        the window — admission caps then track what the engine actually
+        measured instead of the a-priori model. Rounds that admitted
+        nobody carry no timing signal and are skipped.
+        """
+        if getattr(stats, "n_agents", 0) <= 0:
+            return
+        self._obs.append(stats)
+        if self.refit_every <= 0 or len(self._obs) % self.refit_every != 0:
+            return
+        window = self._obs[-self.refit_every:]
+        n = len(window)
+        mean = SimpleNamespace(
+            t_recover=sum(s.t_recover for s in window) / n,
+            t_decode=sum(s.t_decode for s in window) / n,
+            t_restore=sum(s.t_restore for s in window) / n,
+            t_store=sum(s.t_store for s in window) / n,
+            persistent_bytes=sum(s.persistent_bytes for s in window) / n,
+        )
+        n_obs = max(1, round(sum(s.n_agents for s in window) / n))
+        fitted = service_times_from_stats(
+            mean, n_obs, collective=collective,
+            recompute_round=recompute_round)
+        # measured rounds ran n_obs agents; the capacity model scales the
+        # per-request/collective split across candidate counts itself
+        self.measure = lambda n_agents: fitted
+        self.refits += 1

@@ -37,7 +37,20 @@ from repro.core.collector import KVCollector
 from repro.core.segments import PromptLayout, SegmentIndex
 from repro.models import prefill
 from repro.serving.kvpool import PagedKVPool
+from repro.serving.pool.manager import PoolManager, Spillable
 from repro.serving.state import Session
+
+
+def entry_spillable(entry) -> Spillable:
+    """Move a dense :class:`SegmentCacheEntry`'s k/v between tiers, in
+    place — the entry object (and every index that references it) stays;
+    only the array representation flips jax↔numpy."""
+    def get():
+        return (entry.k, entry.v)
+
+    def put(arrs):
+        entry.k, entry.v = arrs
+    return Spillable(get, put)
 
 
 @dataclass
@@ -59,8 +72,42 @@ class PolicyRuntime:
     segment_index: SegmentIndex
     pool: PagedKVPool
     collector: KVCollector
+    #: tiered pool manager (eviction/offload/prefetch) — policies route
+    #: persistent allocations through it and call ``ensure_resident``
+    #: before reading spillable state; None only in bare-runtime tests
+    manager: Optional[PoolManager] = None
     jit: dict = field(default_factory=dict)
     warm: set = field(default_factory=set)
+
+    # ---- pool routing: through the manager when the engine has one ----
+    def pool_alloc(self, owner: str, n_pages: int, *, persistent: bool,
+                   spillable=None):
+        """Allocate pool pages, through the tiered manager when present
+        (pressure may then be relieved by eviction instead of raising).
+        ``spillable`` registers how to move the owner's arrays between
+        tiers — without it the owner can never be evicted."""
+        if self.manager is not None:
+            return self.manager.alloc(owner, n_pages, persistent=persistent,
+                                      spillable=spillable)
+        return self.pool.alloc(owner, n_pages, persistent=persistent)
+
+    def pool_alloc_tokens(self, owner: str, n_tokens: int, *,
+                          persistent: bool, spillable=None):
+        return self.pool_alloc(owner, self.pool.pages_for_tokens(n_tokens),
+                               persistent=persistent, spillable=spillable)
+
+    def pool_free(self, owner: str) -> None:
+        if self.manager is not None:
+            self.manager.free(owner)
+        else:
+            self.pool.free(owner)
+
+    def ensure_resident(self, owner: str) -> None:
+        """Reload ``owner`` from the host tier if it was spilled (no-op
+        without a manager or for resident owners) — policies call this
+        before reading any spillable state."""
+        if self.manager is not None:
+            self.manager.ensure_resident(owner)
 
     def get_jit(self, key, builder):
         if key not in self.jit:

@@ -29,6 +29,7 @@ from repro.serving.policies.base import (
     RecoveryResult,
     ReusePolicy,
     RoundContext,
+    entry_spillable,
     register_policy,
 )
 
@@ -84,6 +85,10 @@ class PICPolicy(ReusePolicy):
             e = rt.segment_index.get(span.sid)
             if e is None:
                 continue
+            # the shared block is some agent's output segment — pull it
+            # back from the host tier if the manager spilled it
+            if getattr(e, "producer", None) is not None:
+                rt.ensure_resident(f"out:{e.producer}")
             shared_k = shared_k.at[:, span.start : span.end].set(e.k)
             shared_v = shared_v.at[:, span.start : span.end].set(e.v)
             src[span.start : span.end] = e.src_pos
@@ -96,6 +101,8 @@ class PICPolicy(ReusePolicy):
         hspan = layouts[0].spans[0]
         priv_mask = np.zeros(S, bool)
         priv = None
+        for a in aids:                 # reload spilled dense histories
+            rt.ensure_resident(f"hist:{a}")
         entries = [rt.sessions[a].hist_entry for a in aids]
         if all(e is not None for e in entries) and hspan.end > hspan.start:
             priv_mask[hspan.start : hspan.end] = True
@@ -244,7 +251,12 @@ class PICPolicy(ReusePolicy):
             rt.sessions[a].hist_entry = SegmentCacheEntry(
                 sid=f"hist:{a}:{ctx.round_idx}", k=hk, v=hv, src_pos=sp,
                 producer=a, round_idx=ctx.round_idx)
-            rt.pool.free(f"hist:{a}")
-            rt.pool.alloc_tokens(f"hist:{a}", hk.shape[1], persistent=True)
-            rt.pool.free(f"out:{a}")
-            rt.pool.alloc_tokens(f"out:{a}", G, persistent=True)
+            rt.pool_free(f"hist:{a}")
+            rt.pool_alloc_tokens(f"hist:{a}", hk.shape[1], persistent=True,
+                                 spillable=entry_spillable(
+                                     rt.sessions[a].hist_entry))
+            rt.pool_free(f"out:{a}")
+            rt.pool_alloc_tokens(f"out:{a}", G, persistent=True,
+                                 spillable=entry_spillable(
+                                     rt.segment_index.get(
+                                         segment_hash(outputs[i]))))

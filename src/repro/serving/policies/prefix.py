@@ -16,12 +16,23 @@ from repro.serving.policies.base import (
     RoundContext,
     register_policy,
 )
+from repro.serving.pool import Spillable
 
 
 def _common_prefix(a: np.ndarray, b: np.ndarray) -> int:
     n = min(a.shape[0], b.shape[0])
     neq = np.nonzero(a[:n] != b[:n])[0]
     return int(neq[0]) if neq.size else n
+
+
+def _session_spillable(s) -> Spillable:
+    """Move a session's dense prefix cache between tiers, in place."""
+    def get():
+        return (s.dense_k, s.dense_v)
+
+    def put(arrs):
+        s.dense_k, s.dense_v = arrs
+    return Spillable(get, put)
 
 
 @register_policy("prefix")
@@ -38,6 +49,7 @@ class PrefixCachePolicy(ReusePolicy):
             return RecoveryPlan(kind="recompute", ctx=ctx)
         plens = []
         for i, aid in enumerate(ctx.agent_ids):
+            self.rt.ensure_resident(f"sess:{aid}")
             s = self.rt.sessions[aid]
             if s.prompt_tokens is None or s.dense_k is None:
                 plens.append(0)
@@ -89,5 +101,6 @@ class PrefixCachePolicy(ReusePolicy):
             s.dense_v = vc[:, i]
             s.prompt_tokens = np.concatenate(
                 [np.asarray(ctx.layouts[i].tokens), outputs[i]])
-            rt.pool.free(f"sess:{a}")
-            rt.pool.alloc_tokens(f"sess:{a}", S + G, persistent=True)
+            rt.pool_free(f"sess:{a}")
+            rt.pool_alloc_tokens(f"sess:{a}", S + G, persistent=True,
+                                 spillable=_session_spillable(s))

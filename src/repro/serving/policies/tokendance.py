@@ -20,8 +20,36 @@ from repro.core.diff_store import (
     compression_stats,
 )
 from repro.core.segments import PagedSegmentCacheEntry, SegmentCacheEntry, segment_hash
-from repro.serving.policies.base import RecoveryResult, RoundContext, register_policy
+from repro.serving.policies.base import (RecoveryResult, RoundContext,
+                                         entry_spillable, register_policy)
 from repro.serving.policies.pic import PICPolicy
+from repro.serving.pool import Spillable
+
+
+def _master_spillable(master: MasterCache) -> Spillable:
+    """Move a Master's dense k/v between tiers, in place."""
+    def get():
+        return (master.k, master.v)
+
+    def put(arrs):
+        master.k, master.v = arrs
+    return Spillable(get, put)
+
+
+def _mirrors_spillable(handles: list) -> Spillable:
+    """Move every mirror diff's value rows between tiers, in place (the
+    index arrays — block ids, slots, positions — are host numpy already
+    and stay put)."""
+    def get():
+        arrs = []
+        for h in handles:
+            arrs.extend((h.diff.k_vals, h.diff.v_vals))
+        return arrs
+
+    def put(arrs):
+        for i, h in enumerate(handles):
+            h.diff.k_vals, h.diff.v_vals = arrs[2 * i], arrs[2 * i + 1]
+    return Spillable(get, put)
 
 
 @register_policy("tokendance")
@@ -95,6 +123,15 @@ class TokenDancePolicy(PICPolicy):
         infos = []
         for fi, (fam, members) in enumerate(families.items()):
             master = self.masters[fam]
+            # the restore reads the family's compressed state and each
+            # member's output segment — pull any of it back from the
+            # host tier first (a prefetch issued last round makes these
+            # hits instead of synchronous reloads)
+            fam_owner = self._fam_owner(fam)
+            rt.ensure_resident(f"td:master:{fam_owner}")
+            rt.ensure_resident(f"td:mirrors:{fam_owner}")
+            for a in members:
+                rt.ensure_resident(f"out:{a}")
             mirrors = [a for a in members if not rt.sessions[a].is_master]
             # equal-length prompts give every family member the same span
             span_len = rt.sessions[members[0]].hist_pending[0]
@@ -119,7 +156,8 @@ class TokenDancePolicy(PICPolicy):
         ``nbh + M*ndb_h`` pages independent of the rest of the previous
         prompt."""
         from repro.core.diff_store import _pad_to_blocks, trim_family
-        from repro.core.restore import fused_restore_family_shared
+        from repro.core.restore import (family_pool_pages,
+                                        fused_restore_family_shared)
 
         rt = self.rt
         cfg = rt.cfg
@@ -128,13 +166,25 @@ class TokenDancePolicy(PICPolicy):
             handles = trim_family(
                 [rt.sessions[a].mirror for a in mirrors], span_len)
             bt = handles[0].diff.block_tokens
-            pool_k, pool_v, page_idx = fused_restore_family_shared(handles)
+            # claim the restore pool's pages from the manager BEFORE the
+            # launch — under pressure this evicts cold owners first —
+            # and hand the grant to the restore so it builds exactly the
+            # pages the ledger accounts
+            n_pool = family_pool_pages(handles)
+            rt.pool_free(f"restore:family:{gid}")
+            rt.pool_alloc_tokens(f"restore:family:{gid}", n_pool * bt,
+                                 persistent=False)
+            pool_k, pool_v, page_idx = fused_restore_family_shared(
+                handles, n_pages=n_pool)
         else:
             # single-agent family: the pool is just the Master's blocks
             bt = rt.block_select or 32
             mk = _pad_to_blocks(master.k[:, :span_len], bt)
             mv = _pad_to_blocks(master.v[:, :span_len], bt)
             nb_ = mk.shape[1] // bt
+            rt.pool_free(f"restore:family:{gid}")
+            rt.pool_alloc_tokens(f"restore:family:{gid}", nb_ * bt,
+                                 persistent=False)
             pool_k = mk.reshape(L, nb_, bt, KV, hd)
             pool_v = mv.reshape(L, nb_, bt, KV, hd)
             page_idx = np.zeros((0, nb_), np.int32)
@@ -161,12 +211,10 @@ class TokenDancePolicy(PICPolicy):
             entry_bytes += s.hist_entry.nbytes()
             dense_equiv += 2 * L * (span_len + out_e.k.shape[1]) * KV * hd \
                 * pool_k.dtype.itemsize
-        # ledger: the family's shared pages are accounted ONCE, not once
-        # per mirror — this is the accounting face of §4.4's page sharing
+        # the family's shared pages are accounted ONCE, not once per
+        # mirror — this is the accounting face of §4.4's page sharing
+        # (the ledger entry itself was claimed before the launch above)
         n_pool = int(pool_k.shape[1])
-        rt.pool.free(f"restore:family:{gid}")
-        rt.pool.alloc_tokens(f"restore:family:{gid}", n_pool * bt,
-                             persistent=False)
         pool_bytes = 2 * pool_k.size * pool_k.dtype.itemsize
         page_b = 2 * L * bt * KV * hd * pool_k.dtype.itemsize
         return {
@@ -277,20 +325,29 @@ class TokenDancePolicy(PICPolicy):
                     and not any(rt.sessions[m].family == k
                                 for m in k if m in rt.sessions)]:
             del self.masters[key]
-            rt.pool.free(f"td:master:{self._fam_owner(key)}")
-            rt.pool.free(f"td:mirrors:{self._fam_owner(key)}")
-        # ledger: one dense master + sparse mirrors + the N output segments
+            rt.pool_free(f"td:master:{self._fam_owner(key)}")
+            rt.pool_free(f"td:mirrors:{self._fam_owner(key)}")
+        # ledger: one dense master + sparse mirrors + the N output
+        # segments. Each allocation registers a Spillable so the tiered
+        # manager can offload it under pressure: the Master's dense k/v,
+        # every mirror diff's value rows, and each output entry's k/v
+        # move host↔device in place inside their owning objects.
         fam = self._fam_owner(ctx.group_key)
-        rt.pool.free(f"td:master:{fam}")
-        rt.pool.alloc_tokens(f"td:master:{fam}", S, persistent=True)
+        rt.pool_free(f"td:master:{fam}")
+        rt.pool_alloc_tokens(
+            f"td:master:{fam}", S, persistent=True,
+            spillable=_master_spillable(master))
         mirror_bytes = sum(h.nbytes() for h in handles)
-        rt.pool.free(f"td:mirrors:{fam}")
-        rt.pool.alloc(
+        rt.pool_free(f"td:mirrors:{fam}")
+        rt.pool_alloc(
             f"td:mirrors:{fam}", -(-mirror_bytes // rt.pool.page_bytes()),
-            persistent=True)
-        for a in aids:
-            rt.pool.free(f"out:{a}")
-            rt.pool.alloc_tokens(f"out:{a}", G, persistent=True)
+            persistent=True, spillable=_mirrors_spillable(handles))
+        for i, a in enumerate(aids):
+            rt.pool_free(f"out:{a}")
+            rt.pool_alloc_tokens(
+                f"out:{a}", G, persistent=True,
+                spillable=entry_spillable(
+                    rt.segment_index.get(segment_hash(outputs[i]))))
 
     @staticmethod
     def _fam_owner(group_key: tuple) -> str:

@@ -1,0 +1,31 @@
+"""Tiered KV pool manager: family-aware eviction, host offload, and
+restore-ahead prefetch over :class:`~repro.serving.kvpool.PagedKVPool`."""
+from repro.serving.pool.eviction import (EvictionCandidate, EvictionPolicy,
+                                         FamilyCostAware, LRUByRound,
+                                         get_eviction_policy)
+from repro.serving.pool.host import HostEntry, HostTier
+from repro.serving.pool.manager import PoolLedger, PoolManager, Spillable
+from repro.serving.pool.owners import (EVICTION_RANK, TRANSIENT_KINDS,
+                                       OwnerInfo, family_owner, family_owners,
+                                       parse_owner)
+from repro.serving.pool.prefetch import PrefetchPlanner
+
+__all__ = [
+    "EVICTION_RANK",
+    "TRANSIENT_KINDS",
+    "EvictionCandidate",
+    "EvictionPolicy",
+    "FamilyCostAware",
+    "HostEntry",
+    "HostTier",
+    "LRUByRound",
+    "OwnerInfo",
+    "PoolLedger",
+    "PoolManager",
+    "PrefetchPlanner",
+    "Spillable",
+    "family_owner",
+    "family_owners",
+    "get_eviction_policy",
+    "parse_owner",
+]

@@ -1,0 +1,294 @@
+"""Tiered pool manager: pressure-aware allocation over :class:`PagedKVPool`.
+
+``PagedKVPool`` is a flat page allocator — when the free list runs dry it
+raises :class:`PoolExhausted` and the round dies. The manager layers the
+three mechanisms that turn that hard wall into graceful degradation:
+
+1. **Family-aware eviction.** Allocation failures trigger
+   :meth:`_make_room`: persistent owners that registered a
+   :class:`Spillable` and were not touched this round are spilled to the
+   host tier in :class:`EvictionPolicy` order (mirror diffs before
+   per-agent segments before Masters). Transient owners
+   (``restore:family:*``, ``round:*``) are never candidates — their
+   pages are the live working set and may be referenced by
+   ``PagedSegmentCacheEntry`` objects — and eviction only ever *spills*
+   (content survives on host), so a family's live pool owner is never
+   stranded.
+
+2. **Host tier.** Spilling converts the owning objects' arrays to host
+   numpy in place (via the registered :class:`Spillable`) and frees the
+   device pages; reloading runs ``jax.device_put`` and re-claims pages.
+   The round trip is bit-exact by construction — no re-quantisation, no
+   re-compression — and every byte moved lands in the :class:`PoolLedger`.
+
+3. **Restore-ahead prefetch.** :meth:`prefetch` reloads a set of owners
+   ahead of use (the engine derives the set from round r+1's admission
+   plan while round r decodes); :meth:`ensure_resident` at the consumer
+   then counts a ``prefetch_hit`` instead of a ``sync_reload``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.serving.kvpool import PagedKVPool, PoolExhausted
+from repro.serving.pool.eviction import (EvictionCandidate, EvictionPolicy,
+                                         get_eviction_policy)
+from repro.serving.pool.host import HostEntry, HostTier
+from repro.serving.pool.owners import parse_owner
+from repro.serving.pool.prefetch import PrefetchPlanner
+
+
+@dataclass
+class Spillable:
+    """How to move one owner's backing arrays between tiers.
+
+    ``get`` returns the arrays as currently stored in the owning objects
+    (``MasterCache.k/v``, ``MirrorDiff.k_vals/v_vals``, a segment
+    entry's ``k/v`` …); ``put`` writes converted arrays back into those
+    same slots. Spill = ``put(np.asarray(x) for x in get())``, reload =
+    ``put(jax.device_put(x) for x in get())`` — the consumer-side code
+    never sees a third representation.
+    """
+
+    get: Callable[[], Sequence[Any]]
+    put: Callable[[Sequence[Any]], None]
+
+
+@dataclass
+class PoolLedger:
+    """Byte/event accounting for tier traffic (the §5 'swap' columns)."""
+
+    spill_events: int = 0
+    spilled_bytes: int = 0
+    spilled_pages: int = 0
+    reload_events: int = 0
+    reloaded_bytes: int = 0
+    reloaded_pages: int = 0
+    #: reloads that blocked a consumer (owner was cold at use time)
+    sync_reloads: int = 0
+    #: reloads issued ahead of use by :meth:`PoolManager.prefetch`
+    prefetched_reloads: int = 0
+    #: consumer touches that found the owner already prefetched
+    prefetch_hits: int = 0
+
+    def snapshot(self) -> Dict[str, int]:
+        return asdict(self)
+
+    def delta(self, prev: Dict[str, int]) -> Dict[str, int]:
+        """Counters advanced since ``prev`` (a :meth:`snapshot`), nonzero
+        entries only — merged into ``RoundStats`` per round."""
+        now = asdict(self)
+        return {k: now[k] - prev.get(k, 0)
+                for k in now if now[k] != prev.get(k, 0)}
+
+
+class PoolManager:
+    """Eviction + host offload + prefetch over a :class:`PagedKVPool`."""
+
+    def __init__(self, pool: PagedKVPool, *,
+                 eviction="family",
+                 host: Optional[HostTier] = None,
+                 prefetch: Optional[PrefetchPlanner] = None):
+        self.pool = pool
+        self.eviction: EvictionPolicy = get_eviction_policy(eviction)
+        self.host = host if host is not None else HostTier()
+        self.prefetch_planner = prefetch if prefetch is not None else PrefetchPlanner()
+        self.ledger = PoolLedger()
+        self.round_idx = 0
+        self._spillables: Dict[str, Spillable] = {}
+        self._last_used: Dict[str, int] = {}
+        self._pinned: set = set()
+        #: owners reloaded ahead of use → round the prefetch was issued
+        self._prefetched: Dict[str, int] = {}
+
+    # --------------------------------------------------------- allocation
+    def alloc(self, owner: str, n_pages: int, *, persistent: bool,
+              spillable: Optional[Spillable] = None):
+        """Allocate device pages, evicting cold owners on pressure.
+
+        An owner currently spilled to host must be :meth:`free`'d or
+        :meth:`reload`'ed first — allocating over it would fork the
+        state across tiers.
+        """
+        assert owner not in self.host, \
+            f"{owner} is spilled to host; reload() or free() it before alloc()"
+        try:
+            a = self.pool.alloc(owner, n_pages, persistent=persistent)
+        except PoolExhausted:
+            self._make_room(n_pages)
+            a = self.pool.alloc(owner, n_pages, persistent=persistent)
+        if spillable is not None:
+            self._spillables[owner] = spillable
+        self.touch(owner)
+        return a
+
+    def alloc_tokens(self, owner: str, n_tokens: int, *, persistent: bool,
+                     spillable: Optional[Spillable] = None):
+        return self.alloc(owner, self.pool.pages_for_tokens(n_tokens),
+                          persistent=persistent, spillable=spillable)
+
+    def free(self, owner: str) -> None:
+        """Drop an owner from every tier (device pages, host entry,
+        spill registration, prefetch stamp)."""
+        self.pool.free(owner)
+        self.host.pop(owner)
+        self._spillables.pop(owner, None)
+        self._prefetched.pop(owner, None)
+        self._last_used.pop(owner, None)
+        self._pinned.discard(owner)
+
+    def free_transient(self) -> None:
+        self.pool.free_transient()
+
+    # ----------------------------------------------------------- pressure
+    def _candidates(self) -> List[EvictionCandidate]:
+        """Evictable owners: persistent, spill-registered, not pinned,
+        and not touched in the current round (protects the live working
+        set and just-prefetched owners)."""
+        cands = []
+        for owner, a in self.pool._allocs.items():
+            if not a.persistent:
+                continue
+            info = parse_owner(owner)
+            if info.transient:
+                continue
+            if owner in self._pinned or owner not in self._spillables:
+                continue
+            if self._last_used.get(owner, -1) >= self.round_idx:
+                continue
+            cands.append(EvictionCandidate(owner, info, a.n_pages,
+                                           self._last_used.get(owner, -1)))
+        return cands
+
+    def _make_room(self, n_pages: int) -> None:
+        """Spill cold owners (policy order) until ``n_pages`` fit, or
+        re-raise :class:`PoolExhausted` if even full eviction falls short."""
+        for c in self.eviction.order(self._candidates()):
+            if self.pool.free_pages >= n_pages:
+                break
+            self.spill(c.owner)
+        if self.pool.free_pages < n_pages:
+            raise PoolExhausted(
+                f"need {n_pages} pages, free {self.pool.free_pages}/"
+                f"{self.pool.n_pages} even after eviction "
+                f"(pinned={len(self._pinned)}, host={len(self.host)})")
+
+    def spill(self, owner: str) -> bool:
+        """Move one owner's arrays to host and free its device pages.
+        Returns False (owner stays resident) if the host tier is full
+        or the owner has no registered :class:`Spillable`."""
+        a = self.pool._allocs.get(owner)
+        sp = self._spillables.get(owner)
+        if a is None or sp is None:
+            return False
+        arrays = [np.asarray(x) for x in sp.get()]
+        nbytes = sum(x.nbytes for x in arrays)
+        if not self.host.fits(nbytes):
+            return False
+        sp.put(arrays)
+        self.host.put(HostEntry(owner, a.n_pages, nbytes, a.persistent,
+                                self.round_idx))
+        self.pool.free(owner)
+        self.pool.swap_events += 1
+        self.ledger.spill_events += 1
+        self.ledger.spilled_bytes += nbytes
+        self.ledger.spilled_pages += a.n_pages
+        self._prefetched.pop(owner, None)
+        return True
+
+    def reload(self, owner: str, *, prefetched: bool = False) -> None:
+        """Bring a spilled owner back: device pages re-claimed (possibly
+        evicting someone else) and arrays ``jax.device_put`` in place.
+        On :class:`PoolExhausted` the host entry is untouched, so a
+        failed (best-effort) reload can simply be retried later."""
+        entry = self.host.get(owner)
+        assert entry is not None, f"{owner} is not spilled"
+        try:
+            self.pool.alloc(owner, entry.n_pages, persistent=entry.persistent)
+        except PoolExhausted:
+            self._make_room(entry.n_pages)
+            self.pool.alloc(owner, entry.n_pages, persistent=entry.persistent)
+        self.host.pop(owner)
+        sp = self._spillables[owner]
+        sp.put([jax.device_put(np.asarray(x)) for x in sp.get()])
+        self.pool.swap_events += 1
+        self.ledger.reload_events += 1
+        self.ledger.reloaded_bytes += entry.nbytes
+        self.ledger.reloaded_pages += entry.n_pages
+        if prefetched:
+            self.ledger.prefetched_reloads += 1
+            self._prefetched[owner] = self.round_idx
+        else:
+            self.ledger.sync_reloads += 1
+        self.touch(owner)
+
+    # ------------------------------------------------------------ consume
+    def ensure_resident(self, owner: str) -> None:
+        """Consumer-side residency check: reload synchronously if the
+        owner is cold, count a hit if a prefetch already warmed it, and
+        stamp the owner as used this round either way."""
+        if owner in self.host:
+            self.reload(owner)
+        elif owner in self._prefetched:
+            self._prefetched.pop(owner)
+            self.ledger.prefetch_hits += 1
+        if owner in self.pool._allocs:
+            self.touch(owner)
+
+    def prefetch(self, owners: Sequence[str]) -> List[str]:
+        """Reload any of ``owners`` that are spilled, ahead of use.
+
+        Best-effort: while the current round's transient working set is
+        live there may be no room yet — such owners are left on host and
+        returned, so the engine can retry once the round's transients
+        are freed (a failed prefetch degrades to a later sync reload,
+        never to an error)."""
+        pending = []
+        for owner in owners:
+            if owner not in self.host:
+                continue
+            try:
+                self.reload(owner, prefetched=True)
+            except PoolExhausted:
+                pending.append(owner)
+        return pending
+
+    def touch(self, owner: str) -> None:
+        self._last_used[owner] = self.round_idx
+
+    def pin(self, owner: str) -> None:
+        self._pinned.add(owner)
+
+    def unpin(self, owner: str) -> None:
+        self._pinned.discard(owner)
+
+    # ------------------------------------------------------------- rounds
+    def begin_round(self, round_idx: int) -> None:
+        self.round_idx = round_idx
+        # a prefetch that nobody consumed within a round of issue is stale
+        for owner, stamp in list(self._prefetched.items()):
+            if stamp < round_idx - 1:
+                del self._prefetched[owner]
+
+    # --------------------------------------------------------- invariants
+    def check(self) -> None:
+        """Assert the cross-tier invariants (used by the property tests):
+        page conservation, no page owned twice, no owner in two tiers."""
+        pool = self.pool
+        assert pool.used_pages() + pool.free_pages == pool.n_pages, \
+            "page conservation violated"
+        seen = set(pool._free)
+        assert len(seen) == len(pool._free), "duplicate page in free list"
+        for a in pool._allocs.values():
+            for p in a.pages:
+                p = int(p)
+                assert p not in seen, f"page {p} owned twice"
+                seen.add(p)
+        assert len(seen) == pool.n_pages, "pages lost"
+        for owner in self.host.owners():
+            assert owner not in pool._allocs, \
+                f"{owner} resident in both tiers"

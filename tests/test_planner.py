@@ -57,6 +57,46 @@ def test_planner_emits_admission_plans():
     assert not RoundPlanner().admission_active
 
 
+def test_observe_refits_measure_from_stats():
+    """The measure→admit loop closes: with refit_every set, observed
+    RoundStats replace the a-priori model via service_times_from_stats,
+    and the admission cap follows the measurement."""
+    class S:  # measured rounds are much cheaper than the a-priori model
+        n_agents = 4
+        t_recover, t_decode, t_restore, t_store = 0.02, 0.01, 0.0, 0.0
+        persistent_bytes = 4000
+    aids = [f"a{i}" for i in range(6)]
+    pl = RoundPlanner(measure=_measure_serial, qps=2.0, slo_s=0.35,
+                      refit_every=2)
+    assert pl.plan_round(0, aids).max_agents == 2
+    pl.observe(S, collective=False)
+    assert pl.refits == 0                      # window not yet full
+    assert pl.plan_round(1, aids).max_agents == 2
+    pl.observe(S, collective=False)
+    assert pl.refits == 1                      # model replaced
+    st = pl.measure(4)
+    assert st.per_request_recover == pytest.approx(0.02 / 4)
+    assert st.persistent_per_agent == pytest.approx(1000)
+    # cheap measured rounds lift the cap to every agent
+    assert pl.plan_round(2, aids).max_agents == len(aids)
+    # empty rounds carry no timing signal and are ignored
+    class Empty:
+        n_agents = 0
+    pl.observe(Empty, collective=False)
+    assert pl.refits == 1
+
+
+def test_observe_without_refit_keeps_model():
+    pl = RoundPlanner(measure=_measure_serial, qps=2.0, slo_s=0.35)
+    class S:
+        n_agents = 2
+        t_recover, t_decode, t_restore, t_store = 0.0, 0.0, 0.0, 0.0
+        persistent_bytes = 0
+    for _ in range(5):
+        pl.observe(S, collective=False)
+    assert pl.refits == 0 and pl.measure is _measure_serial
+
+
 def test_service_times_from_stats_round_trip():
     class S:  # minimal RoundStats stand-in
         t_recover, t_decode, t_restore, t_store = 0.4, 0.1, 0.02, 0.01
@@ -136,6 +176,26 @@ def test_readmitted_agents_rejoin_cleanly(setup):
     # once no session references them
     fams = {eng.sessions[a].family for a in aids}
     assert set(eng.policy.masters) == fams
+
+
+def test_serve_feeds_observations_to_planner(setup):
+    """serve() closes the measurement loop: every served round lands in
+    RoundPlanner.observe, so refit_every re-fits the capacity model from
+    what the engine actually measured."""
+    cfg, params = setup
+    trace = generate_trace("generative_agents", N_AGENTS, 2, cfg.vocab_size,
+                           seed=11, jitter_hist=False)
+    eng = ServingEngine(params, cfg, get_policy("tokendance"), gen_len=GEN,
+                        recompute_ratio=0.1)
+    planner = RoundPlanner(measure=_measure_serial, qps=2.0, slo_s=0.35,
+                           refit_every=1)
+    stats = eng.serve(trace, planner=planner)
+    assert planner.refits >= 1
+    assert planner.measure is not _measure_serial
+    st = planner.measure(2)
+    # the fitted point reflects the engine's measured round, collective
+    assert st.collective and st.collective_recover >= 0.0
+    assert len(stats) == 2
 
 
 def test_serve_without_planner_is_unchanged(setup):

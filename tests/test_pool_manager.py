@@ -1,0 +1,372 @@
+"""Tiered pool manager (ISSUE 6): family-aware eviction, host offload,
+restore-ahead prefetch — unit level against a bare pool, then engine
+level where an undersized pool must be served by tiering instead of
+dying with PoolExhausted."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.rounds import generate_trace
+from repro.models import init_params
+from repro.serving import (
+    HostTier,
+    PagedKVPool,
+    PoolExhausted,
+    PoolManager,
+    RoundPlan,
+    RoundPlanner,
+    ServiceTimes,
+    ServingEngine,
+    Spillable,
+    get_policy,
+)
+from repro.serving.pool import parse_owner
+
+N_AGENTS = 4
+GEN = 32
+
+
+def _pool(n_pages=16, **kw):
+    cfg = get_smoke_config("qwen2.5-7b")
+    pool = PagedKVPool(cfg, n_pages=n_pages)
+    return pool, PoolManager(pool, **kw)
+
+
+class _Box:
+    """Stand-in for an owning object (MasterCache / entry): holds the
+    arrays the Spillable converts in place."""
+
+    def __init__(self, seed, shape=(4, 8)):
+        rng = np.random.default_rng(seed)
+        self.k = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        self.v = jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+    def spillable(self):
+        def get():
+            return (self.k, self.v)
+
+        def put(arrs):
+            self.k, self.v = arrs
+        return Spillable(get, put)
+
+
+# ------------------------------------------------------- kvpool guards
+def test_alloc_raises_on_live_owner():
+    """Silently replacing a live allocation would leak its pages."""
+    pool, _ = _pool(8)
+    pool.alloc("hist:a", 2, persistent=True)
+    with pytest.raises(ValueError, match="still allocated"):
+        pool.alloc("hist:a", 1, persistent=True)
+    pool.free("hist:a")
+    pool.alloc("hist:a", 3, persistent=True)   # free-then-alloc is fine
+    assert pool.used_pages() == 3
+
+
+def test_stale_allocation_cannot_double_free():
+    pool, _ = _pool(8)
+    a = pool.alloc("x", 2, persistent=True)
+    pool.free("x")
+    with pytest.raises(ValueError, match="double free"):
+        pool._release(a)
+    assert pool.free_pages == 8
+    pool.free("x")                             # absent owner stays a no-op
+
+
+# ---------------------------------------------------------- spill/reload
+def test_spill_reload_bit_exact():
+    pool, mgr = _pool(16)
+    box = _Box(0)
+    ref_k, ref_v = np.asarray(box.k).copy(), np.asarray(box.v).copy()
+    mgr.alloc("hist:a0", 4, persistent=True, spillable=box.spillable())
+    mgr.begin_round(1)
+    assert mgr.spill("hist:a0")
+    assert isinstance(box.k, np.ndarray)       # host representation
+    assert "hist:a0" in mgr.host and "hist:a0" not in pool._allocs
+    assert pool.free_pages == 16
+    assert mgr.host.used_pages() == 4
+    mgr.reload("hist:a0")
+    assert isinstance(box.k, jax.Array)
+    np.testing.assert_array_equal(np.asarray(box.k), ref_k)
+    np.testing.assert_array_equal(np.asarray(box.v), ref_v)
+    led = mgr.ledger
+    assert led.spill_events == 1 and led.reload_events == 1
+    assert led.spilled_pages == led.reloaded_pages == 4
+    assert led.spilled_bytes == led.reloaded_bytes == ref_k.nbytes * 2
+    assert pool.swap_events == 2
+    mgr.check()
+
+
+def test_family_eviction_order_mirrors_before_master():
+    pool, mgr = _pool(8, eviction="family")
+    mgr.alloc("td:master:f", 5, persistent=True,
+              spillable=_Box(1).spillable())
+    mgr.alloc("td:mirrors:f", 3, persistent=True,
+              spillable=_Box(2).spillable())
+    mgr.begin_round(1)
+    mgr.alloc("round:x", 2, persistent=False)  # mirrors alone cover this
+    assert "td:mirrors:f" in mgr.host
+    assert "td:master:f" in pool._allocs       # the Master stays resident
+    mgr.free("round:x")
+    mgr.alloc("round:y", 7, persistent=False)  # now the Master must go too
+    assert "td:master:f" in mgr.host
+    mgr.check()
+
+
+def test_lru_eviction_order_coldest_first():
+    pool, mgr = _pool(8, eviction="lru")
+    mgr.alloc("out:old", 4, persistent=True, spillable=_Box(3).spillable())
+    mgr.begin_round(1)
+    mgr.alloc("out:new", 4, persistent=True, spillable=_Box(4).spillable())
+    mgr.begin_round(2)
+    mgr.alloc("round:x", 4, persistent=False)
+    assert "out:old" in mgr.host and "out:new" in pool._allocs
+
+
+def test_transient_pinned_and_current_round_never_evicted():
+    """The live working set is untouchable: transient kinds (the restore
+    pool a live PagedSegmentCacheEntry references, round caches), pinned
+    owners, and anything touched this round."""
+    pool, mgr = _pool(8)
+    # transient kind: never a candidate even if marked persistent
+    mgr.alloc("restore:family:g0", 3, persistent=True,
+              spillable=_Box(5).spillable())
+    mgr.alloc("hist:a", 3, persistent=True, spillable=_Box(6).spillable())
+    mgr.pin("hist:a")
+    mgr.begin_round(1)
+    with pytest.raises(PoolExhausted, match="after eviction"):
+        mgr.alloc("round:x", 4, persistent=False)
+    assert "restore:family:g0" in pool._allocs and len(mgr.host) == 0
+    mgr.unpin("hist:a")
+    mgr.alloc("round:x", 4, persistent=False)  # hist:a may now spill
+    assert "hist:a" in mgr.host
+    mgr.check()
+
+
+def test_owner_without_spillable_never_evicted():
+    pool, mgr = _pool(8)
+    mgr.alloc("hist:a", 8, persistent=True)    # no spillable registered
+    mgr.begin_round(1)
+    with pytest.raises(PoolExhausted):
+        mgr.alloc("round:x", 1, persistent=False)
+    assert "hist:a" in pool._allocs
+
+
+def test_host_capacity_zero_disables_offload():
+    pool, mgr = _pool(8, host=HostTier(0))
+    mgr.alloc("hist:a", 8, persistent=True, spillable=_Box(7).spillable())
+    mgr.begin_round(1)
+    with pytest.raises(PoolExhausted):
+        mgr.alloc("round:x", 1, persistent=False)
+    assert len(mgr.host) == 0 and pool.swap_events == 0
+
+
+def test_alloc_over_spilled_owner_rejected():
+    pool, mgr = _pool(8)
+    mgr.alloc("out:a", 2, persistent=True, spillable=_Box(8).spillable())
+    mgr.begin_round(1)
+    mgr.spill("out:a")
+    with pytest.raises(AssertionError, match="spilled to host"):
+        mgr.alloc("out:a", 2, persistent=True)
+    mgr.free("out:a")                          # free clears every tier
+    assert "out:a" not in mgr.host
+    mgr.alloc("out:a", 2, persistent=True)
+
+
+# -------------------------------------------------------------- prefetch
+def test_prefetch_then_hit_instead_of_sync_reload():
+    pool, mgr = _pool(8)
+    mgr.alloc("out:a", 2, persistent=True, spillable=_Box(9).spillable())
+    mgr.begin_round(1)
+    mgr.spill("out:a")
+    assert mgr.prefetch(["out:a", "out:never-spilled"]) == []
+    assert mgr.ledger.prefetched_reloads == 1
+    mgr.ensure_resident("out:a")
+    assert mgr.ledger.prefetch_hits == 1
+    assert mgr.ledger.sync_reloads == 0
+
+
+def test_cold_use_counts_sync_reload():
+    pool, mgr = _pool(8)
+    mgr.alloc("out:a", 2, persistent=True, spillable=_Box(10).spillable())
+    mgr.begin_round(1)
+    mgr.spill("out:a")
+    mgr.ensure_resident("out:a")
+    assert mgr.ledger.sync_reloads == 1 and mgr.ledger.prefetch_hits == 0
+
+
+def test_prefetch_is_best_effort_under_pressure():
+    pool, mgr = _pool(4)
+    box = _Box(11)
+    mgr.alloc("hist:a", 4, persistent=True, spillable=box.spillable())
+    mgr.begin_round(1)
+    mgr.spill("hist:a")
+    mgr.alloc("round:x", 4, persistent=False)  # transients fill the pool
+    assert mgr.prefetch(["hist:a"]) == ["hist:a"]   # no room: stays spilled
+    assert "hist:a" in mgr.host                # host entry intact
+    mgr.free_transient()
+    assert mgr.prefetch(["hist:a"]) == []      # retried after round end
+    assert mgr.ledger.prefetched_reloads == 1
+    mgr.check()
+
+
+def test_stale_prefetch_stamp_expires():
+    pool, mgr = _pool(8)
+    mgr.alloc("out:a", 2, persistent=True, spillable=_Box(12).spillable())
+    mgr.begin_round(1)
+    mgr.spill("out:a")
+    mgr.prefetch(["out:a"])
+    mgr.begin_round(3)                         # consumer never showed up
+    mgr.ensure_resident("out:a")
+    assert mgr.ledger.prefetch_hits == 0
+
+
+# ------------------------------------------------------------ invariants
+def test_invariants_under_random_ops():
+    """Seeded random alloc/free/spill/reload/next-round churn: page
+    conservation, no double ownership, tier disjointness hold throughout
+    (the hypothesis twin in test_properties.py explores more widely)."""
+    rng = np.random.default_rng(0)
+    pool, mgr = _pool(32)
+    boxes = {}
+    kinds = ["hist:", "out:", "td:master:", "td:mirrors:", "sess:"]
+    for step in range(300):
+        op = rng.integers(0, 5)
+        owner = kinds[int(rng.integers(0, len(kinds)))] + \
+            f"o{int(rng.integers(0, 6))}"
+        try:
+            if op == 0:
+                box = _Box(step)
+                mgr.alloc(owner, int(rng.integers(1, 6)),
+                          persistent=bool(rng.integers(0, 2)),
+                          spillable=box.spillable())
+                boxes[owner] = box
+            elif op == 1:
+                mgr.free(owner)
+            elif op == 2 and owner in pool._allocs:
+                mgr.spill(owner)
+            elif op == 3 and owner in mgr.host:
+                mgr.reload(owner, prefetched=bool(rng.integers(0, 2)))
+            elif op == 4:
+                mgr.begin_round(mgr.round_idx + 1)
+        except (PoolExhausted, ValueError, AssertionError):
+            pass                               # guards ARE the contract
+        mgr.check()
+    assert pool.used_pages() + pool.free_pages == pool.n_pages
+
+
+def test_owner_taxonomy_parse():
+    assert parse_owner("td:master:a0+a1").kind == "master"
+    assert parse_owner("td:mirrors:a0+a1").key == "a0+a1"
+    assert parse_owner("restore:family:g0").transient
+    assert parse_owner("round:a3").transient
+    assert parse_owner("hist:a2").rank is not None
+    assert parse_owner("restore:family:g0").rank is None
+    assert parse_owner("mystery").kind == "other"
+
+
+# ------------------------------------------------------------ engine level
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen2.5-7b").replace(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _measure_serial(n):
+    # caps admission at 2 for qps=2.0, slo=0.35 (see tests/test_planner.py)
+    return ServiceTimes(per_request_recover=0.1, collective_recover=0.15,
+                        decode=0.05, collective=False)
+
+
+def _mk_engine(params, cfg, **kw):
+    return ServingEngine(params, cfg, get_policy("tokendance"), gen_len=GEN,
+                         recompute_ratio=0.1, **kw)
+
+
+def _mk_planner():
+    return RoundPlanner(measure=_measure_serial, qps=2.0, slo_s=0.35)
+
+
+def _trace(cfg, n_rounds):
+    return generate_trace("generative_agents", N_AGENTS, n_rounds,
+                          cfg.vocab_size, seed=11, jitter_hist=False)
+
+
+N_ROUNDS = 4
+
+
+def test_undersized_pool_served_by_tiering(setup):
+    """At a page budget where the plain pool dies with PoolExhausted, the
+    tiered manager serves the full schedule — same agents, bit-exact
+    outputs — by spilling cold family state to host (the engine-level
+    face of the ISSUE 6 acceptance bar)."""
+    cfg, params = setup
+    big = _mk_engine(params, cfg)
+    golden = big.serve(_trace(cfg, N_ROUNDS), planner=_mk_planner())
+    assert big.pool.swap_events == 0           # huge pool: no pressure
+    budget = big.pool.peak_pages - 1
+
+    plain = _mk_engine(params, cfg, pool_pages=budget, host_offload=False)
+    with pytest.raises(PoolExhausted):
+        plain.serve(_trace(cfg, N_ROUNDS), planner=_mk_planner())
+
+    tiered = _mk_engine(params, cfg, pool_pages=budget)
+    stats = tiered.serve(_trace(cfg, N_ROUNDS), planner=_mk_planner())
+    assert len(stats) == N_ROUNDS
+    for sg, st in zip(golden, stats):
+        np.testing.assert_array_equal(sg.outputs, st.outputs)
+        assert sg.admission["admitted"] == st.admission["admitted"]
+    led = tiered.manager.ledger
+    assert led.spill_events > 0 and tiered.pool.swap_events > 0
+    assert led.sync_reloads == 0               # nothing blocked a consumer
+    assert led.spilled_pages >= led.reloaded_pages
+    assert (led.spilled_pages - led.reloaded_pages
+            == tiered.manager.host.used_pages())
+    tiered.manager.check()
+
+
+def test_prefetch_covers_spilled_family(setup):
+    """A family spilled while its agents sit deferred is reloaded by the
+    r+1 lookahead prefetch during round r — the restore at r+1 then hits
+    warm state (zero synchronous reloads) and the outputs stay bit-exact
+    with a never-spilled run."""
+    cfg, params = setup
+    trace = _trace(cfg, 3)
+    aids = [f"agent{i}" for i in range(N_AGENTS)]
+    plans = [RoundPlan(0, aids[:2], aids[2:], max_agents=2),
+             RoundPlan(1, aids[2:], aids[:2], max_agents=2),
+             RoundPlan(2, aids[:2], aids[2:], max_agents=2)]
+
+    golden = _mk_engine(params, cfg)
+    golden.init_agents(trace)
+    g_stats = [golden.run_round(trace.rounds[i], plans[i]) for i in range(3)]
+
+    eng = _mk_engine(params, cfg)
+    eng.init_agents(trace)
+    s0 = eng.run_round(trace.rounds[0], plans[0])
+    # force family(agent0, agent1) compressed state off-device between
+    # rounds (out segments stay: they are shared blocks every agent
+    # reads every round, so they would sync-reload through round 1's
+    # prompt assembly rather than wait for the prefetch)
+    fam = eng.sessions["agent0"].family
+    fam_owner = "+".join(fam)
+    spilled = [o for o in (f"td:master:{fam_owner}",
+                           f"td:mirrors:{fam_owner}")
+               if eng.manager.spill(o)]
+    assert spilled, "nothing spilled — scenario is vacuous"
+    assert all(o in eng.manager.host for o in spilled)
+    # round 1 runs the OTHER committee; its next_plan readmits agent0/1,
+    # so the prefetch reloads their family ahead of round 2's restore
+    s1 = eng.run_round(trace.rounds[1], plans[1], next_plan=plans[2])
+    assert eng.manager.ledger.prefetched_reloads == len(spilled)
+    assert len(eng.manager.host) == 0
+    s2 = eng.run_round(trace.rounds[2], plans[2])
+    led = eng.manager.ledger
+    assert led.sync_reloads == 0               # prefetch made every reload
+    assert led.prefetch_hits >= len(spilled)
+    for sg, st in zip(g_stats, (s0, s1, s2)):
+        np.testing.assert_array_equal(sg.outputs, st.outputs)
+    # round 2 actually restored the reloaded family (paged launch ran)
+    assert s2.reuse.get("restore", {}).get("n_restored", 0) >= 2

@@ -224,6 +224,56 @@ def test_pool_conservation(allocs):
     assert pool.used_pages() == 0
 
 
+@SETTINGS
+@given(st.lists(
+    st.tuples(st.integers(0, 4),          # op
+              st.integers(0, 5),          # owner id
+              st.integers(1, 8),          # n_pages
+              st.booleans()),             # persistent / prefetched
+    min_size=1, max_size=40))
+def test_tiered_manager_invariants(ops):
+    """For ANY interleaving of alloc / free / spill / reload / round
+    advance, the tiered manager preserves: page conservation
+    (free + used == n_pages), no page owned twice, and no owner resident
+    in both tiers at once (PoolManager.check asserts all three)."""
+    from repro.serving.pool import PoolManager, Spillable
+
+    cfg = get_smoke_config("qwen2.5-7b")
+    pool = PagedKVPool(cfg, n_pages=32)
+    mgr = PoolManager(pool)
+    kinds = ("hist:", "out:", "td:master:", "td:mirrors:", "sess:")
+
+    def mk_spillable(seed):
+        box = {"a": jnp.full((4, 4), float(seed), jnp.float32)}
+
+        def get():
+            return (box["a"],)
+
+        def put(arrs):
+            (box["a"],) = arrs
+        return Spillable(get, put)
+
+    for step, (op, oid, n, flag) in enumerate(ops):
+        owner = kinds[oid % len(kinds)] + f"o{oid}"
+        try:
+            if op == 0:
+                mgr.alloc(owner, n, persistent=flag,
+                          spillable=mk_spillable(step))
+            elif op == 1:
+                mgr.free(owner)
+            elif op == 2:
+                mgr.spill(owner)
+            elif op == 3 and owner in mgr.host:
+                mgr.reload(owner, prefetched=flag)
+            elif op == 4:
+                mgr.begin_round(mgr.round_idx + 1)
+        except (PoolExhausted, ValueError, AssertionError):
+            pass                        # rejection is part of the contract
+        mgr.check()
+    assert pool.used_pages() + pool.free_pages == pool.n_pages
+    assert pool.used_pages() * pool.page_bytes() == pool.used_bytes()
+
+
 # ------------------------------------------------------------ flash softmax
 @SETTINGS
 @given(st.integers(1, 4), st.integers(1, 3))

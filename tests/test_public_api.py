@@ -36,6 +36,16 @@ SERVING_API = {
     "Allocation",
     "PagedKVPool",
     "PoolExhausted",
+    # tiered pool manager (ISSUE 6)
+    "EvictionPolicy",
+    "FamilyCostAware",
+    "HostTier",
+    "LRUByRound",
+    "PoolLedger",
+    "PoolManager",
+    "PrefetchPlanner",
+    "Spillable",
+    "get_eviction_policy",
 }
 
 CORE_API = {
