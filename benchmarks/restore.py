@@ -33,6 +33,12 @@ Three experiments:
   ``ops.flash_prefill`` — O(S) per mirror), swept over history length;
   written to ``experiments/bench/prefill_paged.json`` and gated on
   counted bytes like ``restore_paged_e2e.json``.
+* ``paged_decode`` — attention-INPUT bytes per decode STEP for the
+  paged flash decode (``ops.flash_decode_paged``: the span's KV tiles
+  read from pool pages in place, only the growing tail materialized —
+  O(tail + 1 page), flat in span) vs the dense decode loop that
+  re-streams the full O(S+G) cache every step; written to
+  ``experiments/bench/decode_paged.json`` and gated on counted bytes.
 
 Timings use the oracle dispatch (``use_kernel=False``) on CPU — the
 Pallas interpreter is not a timing proxy; on a TPU backend the same
@@ -101,6 +107,7 @@ def run(rep: Reporter, quick: bool = False) -> None:
     family_sweep(rep, quick=quick)
     paged_e2e(rep, quick=quick)
     paged_prefill(rep, quick=quick)
+    paged_decode(rep, quick=quick)
 
 
 def _synthetic_family(rng, M, *, L=4, nb=32, bt=32, KV=2, hd=64,
@@ -483,6 +490,144 @@ def paged_prefill(rep: Reporter, quick: bool = False) -> None:
             f"{[round(r['bytes_per_mirror_paged'] / 1e3, 1) for r in rows]}")
 
 
+def paged_decode(rep: Reporter, quick: bool = False) -> None:
+    """Attention-input bytes per DECODE STEP: paged flash decode vs the
+    dense decode loop (ISSUE 7 acceptance artifact: ``decode_paged.json``).
+
+    For each history span the sweep builds a real page-sharing family
+    pool plus a mid-page decode tail (T=17 — the hard case: a page in
+    the middle of filling), then runs the single-token step both ways:
+
+    * paged: ``ops.flash_decode_paged`` — the span's KV tiles resolve
+      through the page table (on TPU, in the kernel's scalar-prefetch
+      BlockSpec index map; the jnp oracle dispatch used for CPU timing
+      performs the same stream). Dense bytes materialized per step = the
+      padded tail only — O(tail + 1 page), INDEPENDENT of the span
+      behind the table.
+    * dense: gather the span from pages once (``ref.paged_kv_ref``, the
+      per-round copy the paged decode loop deletes), then dense
+      ``ops.flash_decode`` — every step re-streams the O(S+G) cache.
+
+    Parity: the REAL kernels (interpret mode on CPU) are compared
+    bit-for-bit, paged vs dense-on-gathered, on the smallest row before
+    anything is recorded — the full matrix is tests/test_flash_decode.py.
+    The paged byte count comes from ``ops.paged_decode_input_bytes``,
+    kept adjacent to the wrapper's padding rule; the engine-level
+    no-densify property is pinned by the monkeypatch-spy test in
+    tests/test_paged_decode.py. Wall-clock is advisory (noisy-CI
+    policy, docs/benchmarks.md).
+    """
+    import time
+
+    import jax
+
+    from repro.core.restore import fused_restore_family_shared
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(17)
+    bt, KV, hd, H = 32, 2, 64, 4
+    M = 3
+    T = 17                                 # mid-page tail (page filling)
+    span_blocks = (4, 8, 16) if quick else (4, 8, 16, 32)
+    itemsize = 4                           # float32
+    rows = []
+    for nbh in span_blocks:
+        span = nbh * bt
+        S = span + T
+        master, handles, _ = _synthetic_family(
+            rng, M, L=1, nb=nbh, bt=bt, KV=KV, hd=hd)
+        pool_k, pool_v, page_idx = fused_restore_family_shared(handles)
+        pk_l, pv_l = pool_k[0], pool_v[0]          # the layer slice
+        q = jnp.asarray(rng.normal(size=(H, 1, hd)), jnp.float32)
+        tail_k = jnp.asarray(rng.normal(size=(T, KV, hd)), jnp.float32)
+        tail_v = jnp.asarray(rng.normal(size=(T, KV, hd)), jnp.float32)
+        pidx0 = jnp.asarray(page_idx[0], jnp.int32)
+
+        def paged(use_kernel=False):
+            return ops.flash_decode_paged(
+                q, pk_l, pv_l, pidx0, tail_k, tail_v,
+                span_len=span, use_kernel=use_kernel)
+
+        def gather_kv():
+            return ref.paged_kv_ref(pk_l, pv_l, pidx0, tail_k, tail_v, span)
+
+        kd0, vd0 = gather_kv()
+
+        def dense(use_kernel=False):
+            return ops.flash_decode(q, kd0, vd0, block_k=bt,
+                                    use_kernel=use_kernel)
+
+        if nbh == span_blocks[0]:
+            # real parity, real kernels, smallest row only (interpret
+            # mode is slow; the matrix is tests/test_flash_decode.py)
+            np.testing.assert_array_equal(
+                np.asarray(paged(use_kernel=True)),
+                np.asarray(dense(use_kernel=True)))
+
+        # counted work: dense KV bytes streamed into one decode step.
+        # Paged: the wrapper's padded tail, from the rule-adjacent
+        # helper. Dense: the full gathered cache, re-read every step.
+        bytes_paged = ops.paged_decode_input_bytes(pk_l, T)
+        bytes_dense = int(kd0.nbytes + vd0.nbytes)
+        assert bytes_dense == 2 * S * KV * hd * itemsize  # sanity
+
+        for fn in (paged, dense):          # warm the jit caches
+            jax.block_until_ready(fn())
+        t = {"paged": float("inf"), "dense": float("inf")}
+        for _ in range(4):
+            for key, fn in (("paged", paged), ("dense", dense)):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                t[key] = min(t[key], time.perf_counter() - t0)
+
+        row = {
+            "span_blocks": nbh,
+            "span_len": span,
+            "tail_len": T,
+            "M": M,
+            "pool_pages": int(pool_k.shape[1]),
+            "bytes_per_step_paged": bytes_paged,
+            "bytes_per_step_dense": bytes_dense,
+            "bytes_ratio": bytes_dense / bytes_paged,
+            "t_paged_us": t["paged"] * 1e6,       # advisory
+            "t_dense_us": t["dense"] * 1e6,       # advisory
+        }
+        rows.append(row)
+        rep.add(f"decode_paged/nbh{nbh}", bytes_paged / 1e3,
+                f"kB/step paged vs {bytes_dense/1e3:.1f} dense "
+                f"({row['bytes_ratio']:.1f}x), pool {row['pool_pages']}p")
+
+    flat = len({r["bytes_per_step_paged"] for r in rows}) == 1
+    below = all(r["bytes_per_step_paged"] < r["bytes_per_step_dense"]
+                for r in rows)
+    payload = {
+        "sweep": rows,
+        "paged_bytes_flat_in_span": flat,
+        "paged_below_dense_every_span": below,
+        "shape": {"bt": bt, "KV": KV, "hd": hd, "H": H, "M": M, "T": T,
+                  "dtype": "float32"},
+        "note": "counted dense bytes streamed into ONE decode step: "
+                "paged = the wrapper's padded tail "
+                "(ops.paged_decode_input_bytes, O(tail + 1 page)); "
+                "dense = the gathered kd/vd cache re-read per step "
+                "(O(S+G)). Kernel-level bit-exact parity paged==dense "
+                "asserted on the smallest row (full matrix: "
+                "tests/test_flash_decode.py); the engine's no-densify "
+                "property is pinned by the monkeypatch-spy test in "
+                "tests/test_paged_decode.py. Timings use the oracle "
+                "dispatch on CPU (advisory); the Pallas kernel compiles "
+                "on TPU backends.",
+    }
+    rep.record("paged_decode", payload)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    name = "decode_paged_quick.json" if quick else "decode_paged.json"
+    with open(os.path.join(OUT_DIR, name), "w") as f:
+        json.dump(payload, f, indent=1)
+    rep.add("decode_paged/flat", float(flat and below),
+            f"paged kB/step by span: "
+            f"{[round(r['bytes_per_step_paged'] / 1e3, 1) for r in rows]}")
+
+
 def _interleaved_min(cases, sizes, *, rounds: int = 4, iters: int = 4,
                      warmup: int = 2):
     """Global min wall seconds per (size, path), timed in rounds that
@@ -517,3 +662,4 @@ if __name__ == "__main__":
     family_sweep(_rep)
     paged_e2e(_rep)
     paged_prefill(_rep)
+    paged_decode(_rep)

@@ -19,6 +19,11 @@ from repro.kernels.diff_restore import (
     fused_diff_restore_kernel,
     fused_family_restore_kernel,
 )
+from repro.kernels.flash_decode import (
+    Q_ROWS,
+    flash_decode_kernel,
+    flash_decode_paged_kernel,
+)
 from repro.kernels.flash_prefill import (
     flash_prefill_kernel,
     flash_prefill_paged_kernel,
@@ -137,6 +142,80 @@ def flash_prefill_paged(q, pool_k, pool_v, page_idx, tail_k=None, tail_v=None,
         span_len=span_len, tail_len=T, causal=causal, window=window,
         block_q=bq, interpret=_interpret())
     return out[:, :S]
+
+
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "use_kernel"))
+def flash_decode(q, k, v, *, window: int = 0, block_k: int = 128,
+                 use_kernel: bool = True):
+    """Single-token decode attention: q [H, 1, hd] at position ``Sk - 1``
+    over k/v [KV, Sk, hd].
+
+    Ragged Sk is handled HERE, once: the kernel hard-asserts tile-aligned
+    KV, so this wrapper zero-pads k/v to the tile, masks the padded
+    columns inside the kernel (``kv_len``), pads the length-1 query to
+    the f32 sublane tile, and slices both paddings off the output.
+    Padding is bit-exact: masked columns score ``-inf`` and contribute
+    exact zeros to the online softmax.
+    """
+    if not use_kernel:
+        return ref.flash_decode_ref(q, k, v, window=window)
+    Sk = k.shape[1]
+    bk = min(block_k, Sk)
+    Skp = -(-Sk // bk) * bk
+    out = flash_decode_kernel(
+        _pad_axis(q, 1, Q_ROWS), _pad_axis(k, 1, Skp), _pad_axis(v, 1, Skp),
+        kv_len=Sk, window=window, block_k=bk, interpret=_interpret())
+    return out[:, :1]
+
+
+def paged_decode_input_bytes(pool_k, tail_len: int) -> int:
+    """Dense KV bytes :func:`flash_decode_paged` materializes before its
+    launch: the current round's generated tail zero-padded to the page
+    tile (k + v), nothing else — the history span and every sealed round
+    page stay in the pool, so the per-step decode input is
+    O(tail + 1 page) and independent of the history span. Kept NEXT TO
+    the wrapper whose padding rule it mirrors (the same contract as
+    :func:`paged_prefill_input_bytes`); the ``decode_paged.json``
+    benchmark counts with this."""
+    P, bt, KV, hd = pool_k.shape
+    t_pad = max(bt, -(-tail_len // bt) * bt)
+    return 2 * t_pad * KV * hd * pool_k.dtype.itemsize
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "span_len", "window", "use_kernel"))
+def flash_decode_paged(q, pool_k, pool_v, page_idx, tail_k=None, tail_v=None,
+                       *, span_len: int, window: int = 0,
+                       use_kernel: bool = True):
+    """Paged single-token decode attention: q [H, 1, hd] over KV read
+    straight from a round page pool ([P, bt, KV, hd] + int32 page table
+    [nbh]) plus the dense tail ([T, KV, hd]) holding this round's
+    freshly generated tokens — the only content with no sealed page yet.
+    The query sits at position ``span_len + T - 1``.
+
+    Only the padded tail and the q-row padding are materialized —
+    O(tail + 1 page) per step, flat in the history span; the span's
+    O(S) bytes stay in the pool and are streamed by the kernel.
+    ``use_kernel=False`` dispatches to the gather-then-attend oracle.
+    """
+    if not use_kernel:
+        return ref.flash_decode_paged_ref(
+            q, pool_k, pool_v, page_idx, tail_k, tail_v,
+            span_len=span_len, window=window)
+    bt = pool_k.shape[1]
+    T = 0 if tail_k is None else tail_k.shape[0]
+    Tp = max(bt, -(-T // bt) * bt)      # >= one tile so the specs are valid
+    if tail_k is None:
+        tail_k = jnp.zeros((Tp,) + pool_k.shape[2:], pool_k.dtype)
+        tail_v = jnp.zeros((Tp,) + pool_v.shape[2:], pool_v.dtype)
+    else:
+        tail_k = _pad_axis(tail_k, 0, Tp)
+        tail_v = _pad_axis(tail_v, 0, Tp)
+    out = flash_decode_paged_kernel(
+        _pad_axis(q, 1, Q_ROWS), pool_k, pool_v, page_idx, tail_k, tail_v,
+        span_len=span_len, tail_len=T, window=window, interpret=_interpret())
+    return out[:, :1]
 
 
 # --------------------------------------------------------------------------

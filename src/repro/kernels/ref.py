@@ -116,6 +116,37 @@ def flash_attention_paged_ref(q, pool_k, pool_v, page_idx, tail_k, tail_v,
                                scale=scale)
 
 
+def flash_decode_ref(q, k, v, *, window=0, scale=None):
+    """Oracle for kernels.flash_decode: a single query (q ``[H, 1, hd]``)
+    at position ``Sk - 1`` attending over the whole accumulated KV
+    (``[KV, Sk, hd]``). Causality is implicit — every key is at or
+    before the query — so the only masking is the sliding window. NOT
+    the Sq=1 slice of :func:`flash_attention_ref` with ``causal=True``:
+    that would anchor the query at row 0 and mask all but the first key.
+    """
+    H, Sq, hd = q.shape
+    KV, Sk, _ = k.shape
+    G = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(KV, G, Sq, hd).astype(jnp.float32)
+    logits = jnp.einsum("kgqh,ksh->kgqs", qg, k.astype(jnp.float32)) * scale
+    if window:
+        qpos = Sk - 1
+        keep = (qpos - jnp.arange(Sk)) < window
+        logits = jnp.where(keep[None, None, None, :], logits, -2.0 ** 30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("kgqs,ksh->kgqh", p, v.astype(jnp.float32))
+    return out.reshape(H, Sq, hd).astype(v.dtype)
+
+
+def flash_decode_paged_ref(q, pool_k, pool_v, page_idx, tail_k, tail_v, *,
+                           span_len, window=0, scale=None):
+    """Oracle for kernels.flash_decode.flash_decode_paged_kernel: gather
+    pages + tail dense, then single-query attention over the result."""
+    k, v = paged_kv_ref(pool_k, pool_v, page_idx, tail_k, tail_v, span_len)
+    return flash_decode_ref(q, k, v, window=window, scale=scale)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
     """Oracle for kernels.flash_prefill.
 

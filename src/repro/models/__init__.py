@@ -1,9 +1,11 @@
 from repro.models.transformer import (
     decode_step,
+    decode_step_paged,
     forward,
     init_params,
     make_empty_cache,
     prefill,
 )
 
-__all__ = ["decode_step", "forward", "init_params", "make_empty_cache", "prefill"]
+__all__ = ["decode_step", "decode_step_paged", "forward", "init_params",
+           "make_empty_cache", "prefill"]

@@ -197,6 +197,75 @@ def _block_decode(h, p, cfg: ModelConfig, *, window, positions, cos, sin,
     return shard(h, "act_resid"), new_cache
 
 
+def _block_decode_paged(h, p, cfg: ModelConfig, *, window, positions, cos,
+                        sin, shard, layer_cache):
+    """One-token block whose attention KV cache is a page pool
+    (attention-only — see :func:`decode_step_paged`). Mirrors
+    :func:`_block_decode` minus the SSM branch."""
+    x = rmsnorm(h, p["ln1"], cfg.rmsnorm_eps)
+    a_out, (pk, pv) = _decode_attention_paged(
+        x, p["attn"], cfg, window, positions, cos, sin, shard, layer_cache)
+    h = h + a_out
+    if cfg.is_moe:
+        x2 = rmsnorm(h, p["ln2"], cfg.rmsnorm_eps)
+        m_out, _ = moe_block(x2, p["moe"], cfg=cfg, shard=shard)
+        h = h + m_out
+    elif "mlp" in p:
+        x2 = rmsnorm(h, p["ln2"], cfg.rmsnorm_eps)
+        h = h + swiglu_mlp(x2, p["mlp"], shard)
+    return shard(h, "act_resid"), {"pk": pk, "pv": pv}
+
+
+def _decode_attention_paged(x, p, cfg, window, positions, cos, sin, shard, lc):
+    """Paged twin of :func:`_decode_attention`: the new token's K/V is
+    scatter-written into its round pool page (``page_idx[b, length//bt]``
+    at slot ``length % bt``) instead of a dense cache row, and the
+    attention stream is gathered back through the page table at the
+    point of use. The gather reconstructs exactly the dense ``k_all``
+    the dense path builds — pages are the dense cache's blocks — so the
+    two paths are bit-identical (pinned in tests). This is the XLA form
+    of ``kernels.flash_decode``'s paged kernel: same data, fetched
+    through the page table (the Pallas kernel is the TPU form, validated
+    against the same oracle in interpret mode)."""
+    from repro.models.layers import apply_rope, dispatch_attention
+
+    B, S1, D = x.shape  # S1 == 1
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def proj(wname, bname, nh):
+        y = jnp.einsum("bsd,dhk->bshk", x, p[wname].reshape(D, nh, hd))
+        if bname in p:
+            y = y + p[bname].reshape(nh, hd)
+        return y
+
+    q = proj("wq", "bq", H)
+    k = proj("wk", "bk", KV)
+    v = proj("wv", "bv", KV)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.rmsnorm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.rmsnorm_eps)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    length = lc["length"]                         # [B]
+    page_idx = lc["page_idx"]                     # [B, nbt] int32
+    bt = lc["pk"].shape[1]
+    B_, nbt = page_idx.shape
+    rows = jnp.arange(B_)
+    pages = page_idx[rows, length // bt]          # each seq's open gen page
+    slots = length % bt
+    pk = lc["pk"].at[pages, slots].set(k[:, 0])   # [P, bt, KV, hd]
+    pv = lc["pv"].at[pages, slots].set(v[:, 0])
+    k_all = pk[page_idx].reshape(B_, nbt * bt, KV, hd)
+    v_all = pv[page_idx].reshape(B_, nbt * bt, KV, hd)
+    out = dispatch_attention(
+        cfg, q, k_all, v_all, q_pos=positions, kv_pos=lc["kv_pos"],
+        window=window, softcap=cfg.attn_logit_softcap,
+        kv_valid=lc["kv_valid"])
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].reshape(H, hd, D))
+    return shard(out, "act_resid"), (pk, pv)
+
+
 def _decode_attention(x, p, cfg, window, positions, cos, sin, shard, lc):
     """Write the new token's K/V into the cache and attend over it."""
     from repro.models.layers import apply_rope, dispatch_attention
@@ -517,5 +586,71 @@ def decode_step(
     new_cache.update(new_caches)
     if cfg.has_attention:
         new_cache["kv_pos"], new_cache["kv_valid"] = kv_pos, kv_valid
+    new_cache["length"] = length + 1
+    return logits, new_cache
+
+
+def decode_step_paged(
+    params: dict,
+    cfg: ModelConfig,
+    token: jax.Array,          # [B] int32
+    cache: dict,
+    *,
+    shard=_noshard,
+    long_context: bool = False,
+    unroll: bool = False,
+):
+    """:func:`decode_step` whose attention KV lives in round pool pages.
+
+    ``cache`` carries per-layer page pools ``pk``/``pv``
+    [L, P, bt, KV, hd] and a shared page table ``page_idx`` [B, nbt]
+    instead of dense ``k``/``v``: the new token's K/V is scatter-written
+    into page ``page_idx[b, length // bt]`` at slot ``length % bt`` (the
+    page fills across steps and seals when generation crosses the next
+    block boundary), and attention gathers the table's pages back into
+    the dense-equivalent stream at the point of use. Outputs and updated
+    state are bit-identical to :func:`decode_step` on the corresponding
+    dense cache. Attention-only architectures — the serving engine
+    routes SSM/hybrid state through the dense loop.
+    """
+    assert cfg.has_attention and not cfg.has_ssm, \
+        "paged decode carries attention KV only; use decode_step for SSM"
+    B = token.shape[0]
+    h = jnp.take(params["embed"], token[:, None], axis=0).astype(_dtype(cfg))
+    h = h.reshape(B, 1, -1)
+    length = cache["length"]
+    positions = length[:, None]  # [B, 1]
+    cos, sin = rope_cos_sin(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    page_idx = cache["page_idx"]
+    nbt, bt = page_idx.shape[1], cache["pk"].shape[2]
+    max_len = nbt * bt
+    kv_pos = jax.vmap(
+        lambda p_, i, l: jax.lax.dynamic_update_slice(p_, l[None], (i,))
+    )(cache["kv_pos"], length, length)
+    kv_valid = jax.vmap(
+        lambda v_, i: jax.lax.dynamic_update_slice(v_, jnp.ones((1,), bool), (i,))
+    )(cache["kv_valid"], length)
+    windows = _windows(cfg, max_len, long_context)
+
+    def body(h, xs):
+        p, window, lc = xs
+        lc = dict(lc)
+        lc["length"] = length
+        lc["kv_pos"], lc["kv_valid"] = kv_pos, kv_valid
+        lc["page_idx"] = page_idx
+        h, new_lc = _block_decode_paged(
+            h, p, cfg, window=window, positions=positions, cos=cos, sin=sin,
+            shard=shard, layer_cache=lc)
+        return h, new_lc
+
+    layer_caches = {"pk": cache["pk"], "pv": cache["pv"]}
+    h, new_caches = jax.lax.scan(body, h,
+                                 (params["blocks"], windows, layer_caches),
+                                 unroll=cfg.n_layers if unroll else 1)
+    logits = _logits(params, cfg, h, shard)[:, 0]
+
+    new_cache = dict(cache)
+    new_cache.update(new_caches)
+    new_cache["kv_pos"], new_cache["kv_valid"] = kv_pos, kv_valid
     new_cache["length"] = length + 1
     return logits, new_cache

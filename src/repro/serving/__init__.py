@@ -26,6 +26,7 @@ from repro.serving.policies import (
     get_policy,
     register_policy,
 )
+from repro.serving.round_kv import DenseRoundKV, PagedRoundKV, round_kv
 from repro.serving.scheduler import (
     ServiceTimes,
     max_agents_under_slo,
@@ -75,4 +76,8 @@ __all__ = [
     "PrefetchPlanner",
     "Spillable",
     "get_eviction_policy",
+    # round-KV views (ISSUE 7)
+    "DenseRoundKV",
+    "PagedRoundKV",
+    "round_kv",
 ]

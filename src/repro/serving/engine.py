@@ -43,7 +43,7 @@ from repro.core.rounds import (
     round_prompt,
 )
 from repro.core.segments import PromptLayout, SegmentIndex
-from repro.models import decode_step
+from repro.models import decode_step, decode_step_paged
 from repro.serving.kvpool import PagedKVPool
 from repro.serving.planner import RoundPlan, RoundPlanner
 from repro.serving.pool import HostTier, PoolManager
@@ -68,13 +68,17 @@ class ServingEngine:
         policy: Union[ReusePolicy, str] = "tokendance",
         *,
         topology: Optional[GatherTopology] = None,
-        gen_len: int = 16,
+        # default gen_len must satisfy the block-alignment assert below
+        # with the default block_select — ServingEngine(params, cfg) with
+        # zero kwargs has to construct (regression-pinned in tests)
+        gen_len: int = 32,
         recompute_ratio: float = 0.15,
         block_select: int = 32,
         check_layer: int = 1,
         pool_pages: int = 1 << 16,
         eviction="family",
         host_offload: bool = True,
+        paged_decode: bool = True,
         keep_recovered: bool = False,
         keep_logits: bool = False,
     ):
@@ -102,6 +106,10 @@ class ServingEngine:
         self.manager = PoolManager(
             self.pool, eviction=eviction,
             host=HostTier(None if host_offload else 0))
+        # decode over round pool pages (the KV-never-densifies fast
+        # path); False keeps the dense [L, N, S+G] decode loop, the
+        # bit-exact oracle the paged path is pinned against
+        self.paged_decode = paged_decode
         self.keep_recovered = keep_recovered
         # record per-round first-token logits on RoundStats (host copy of
         # [N, vocab] per round — parity-test food, off by default)
@@ -165,9 +173,11 @@ class ServingEngine:
                  [l for _, l, _ in p]) for p in parts.values()]
 
     # ------------------------------------------------------------------
-    def _decode(self, first_logits, prefill_cache: dict, N: int, S: int):
-        """Greedy decode gen_len tokens for the group from a prefill-state
-        cache (attention KV, SSM state, or both)."""
+    def _decode_dense(self, first_logits, prefill_cache: dict, N: int, S: int):
+        """Greedy decode gen_len tokens for the group over a dense padded
+        [L, N, S+G] cache (attention KV, SSM state, or both) — the
+        fallback for SSM/hybrid state and the bit-exact oracle the paged
+        loop is pinned against."""
         cfg, G = self.cfg, self.gen_len
         total = S + G
         cache = {"length": jnp.full((N,), S, jnp.int32)}
@@ -206,17 +216,94 @@ class ServingEngine:
         return np.stack([np.asarray(t) for t in outs], axis=1), cache, dt
 
     # ------------------------------------------------------------------
+    def _paged_decode_ok(self, prefill_cache: dict, S: int) -> bool:
+        """The paged loop carries attention KV only and needs the page
+        tile to line up with the prompt and generation lengths (both are
+        block-aligned by construction: ``round_prompt`` aligns S, the
+        ctor asserts gen_len)."""
+        bt = self.block_select
+        return (self.paged_decode and bt > 0
+                and "k" in prefill_cache
+                and "ssm" not in prefill_cache
+                and "conv" not in prefill_cache
+                and S % bt == 0 and self.gen_len % bt == 0)
+
+    def _decode_paged(self, first_logits, prefill_cache: dict, N: int,
+                      S: int, gaids: List[str]):
+        """Greedy decode whose attention KV lives in round pool pages —
+        the recovered prefill KV becomes each agent's sealed pages and
+        every generated token is scatter-written into the open gen page,
+        so the dense [L, N, S+G] cache of :meth:`_decode_dense` is never
+        built. The in-step gather of the SAME pages reconstructs the
+        dense KV stream exactly, making outputs bit-identical to the
+        dense loop (pinned in tests). Each time generation crosses a
+        block boundary the ledger claims a fresh page per agent
+        (:meth:`PoolManager.append_page`), landing on the same
+        end-of-round page totals as the dense loop's up-front S+G
+        allocation."""
+        cfg, G, bt = self.cfg, self.gen_len, self.block_select
+        total = S + G
+        nb_s, nb_g = S // bt, G // bt
+        nbt = nb_s + nb_g
+        k, v = prefill_cache["k"], prefill_cache["v"]
+        L, _, _, KV, hd = k.shape
+
+        def to_pool(x):
+            # [L, N, S, KV, hd] -> [L, N*nbt, bt, KV, hd]: the prompt's
+            # blocks become sealed pages; gen pages start zeroed (the
+            # dense loop's jnp.pad by G, page-shaped)
+            x = x.reshape(L, N, nb_s, bt, KV, hd)
+            x = jnp.pad(x, ((0, 0), (0, 0), (0, nb_g),
+                            (0, 0), (0, 0), (0, 0)))
+            return x.reshape(L, N * nbt, bt, KV, hd)
+
+        cache = {
+            "pk": to_pool(k),
+            "pv": to_pool(v),
+            "page_idx": jnp.arange(N * nbt, dtype=jnp.int32).reshape(N, nbt),
+            "kv_pos": jnp.pad(jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None], (N, S)),
+                ((0, 0), (0, G))),
+            "kv_valid": jnp.pad(jnp.ones((N, S), bool), ((0, 0), (0, G))),
+            "length": jnp.full((N,), S, jnp.int32),
+        }
+        key = ("decode_paged", N, total)
+        if key not in self.rt.jit:
+            def f(tok, cache):
+                logits, cache = decode_step_paged(self.params, cfg, tok, cache)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+            self.rt.jit[key] = jax.jit(f)
+        step = self.rt.jit[key]
+        tok = jnp.argmax(first_logits, axis=-1).astype(jnp.int32)
+        if key not in self.rt.warm:
+            jax.block_until_ready(step(tok, cache))
+            self.rt.warm.add(key)
+        outs = [tok]
+        t0 = time.perf_counter()
+        for t in range(G - 1):
+            if (S + t) % bt == 0:
+                # the write at position S+t opens a fresh gen page:
+                # claim it in the ledger before the step fills its
+                # first slot (the previous page is sealed from here on)
+                for a in gaids:
+                    self.manager.append_page(f"round:{a}")
+            tok, cache = step(tok, cache)
+            outs.append(tok)
+        jax.block_until_ready(tok)
+        dt = time.perf_counter() - t0
+        return np.stack([np.asarray(t) for t in outs], axis=1), cache, dt
+
+    # ------------------------------------------------------------------
     def run_round(self, rnd: Round, plan: Optional[RoundPlan] = None,
                   next_plan: Optional[RoundPlan] = None) -> RoundStats:
         # generate mode: use previous outputs as this round's shared blocks.
         # Agents that have not produced yet (deferred by admission since
         # round 0) contribute their trace replay block instead.
         if self.round_idx > 0 and self.last_outputs:
-            blocks = list(rnd.shared_blocks)
+            fallback = self._replay_fallback_blocks(rnd)
             shared = []
-            for i, a in enumerate(self.sessions):
-                prev = self.last_outputs.get(
-                    a, blocks[i] if i < len(blocks) else None)
+            for a in self.sessions:
+                prev = self.last_outputs.get(a, fallback.get(a))
                 assert prev is not None, f"no output block for agent {a}"
                 shared.append(prev)
             rnd = Round(rnd.index, shared, rnd.tasks)
@@ -273,10 +360,12 @@ class ServingEngine:
         if self._prefetch_pending:   # retry now that transients are free
             self.manager.prefetch(self._prefetch_pending)
             self._prefetch_pending = []
-        stats.persistent_bytes = self._persistent_bytes()
+        dev_bytes, host_bytes = self._persistent_split()
+        stats.persistent_bytes = dev_bytes + host_bytes
         pool_delta = self.manager.ledger.delta(ledger_before)
-        if pool_delta:
-            stats.merge_reuse("pool", pool_delta)
+        pool_delta["persistent_device_bytes"] = dev_bytes
+        pool_delta["persistent_host_bytes"] = host_bytes
+        stats.merge_reuse("pool", pool_delta)
         self.round_idx += 1
         return stats
 
@@ -309,14 +398,19 @@ class ServingEngine:
                 (np.asarray(res.cache["k"]),
                  np.asarray(res.cache["v"]), list(layouts)))
 
-        # transient working set: N dense caches of S+G tokens (the restore
-        # pool allocated during plan() is reclaimed here, after its peak
-        # registered — same accounting order as the pre-policy engine)
+        # transient working set (the restore pool allocated during plan()
+        # is reclaimed here, after its peak registered — same accounting
+        # order as the pre-policy engine). Dense decode claims the full
+        # S+G tokens up front; paged decode claims only the S prefill
+        # tokens and grows one page per block boundary via append_page,
+        # reaching the same S+G total by round end.
+        use_paged = self._paged_decode_ok(res.cache, S)
         self.manager.free_transient()
         for a in gaids:
             self.manager.free(f"round:{a}")
-            self.manager.alloc_tokens(f"round:{a}", S + self.gen_len,
-                                      persistent=False)
+            self.manager.alloc_tokens(
+                f"round:{a}", S if use_paged else S + self.gen_len,
+                persistent=False)
 
         # restore-ahead prefetch for round r+1, overlapped with decode
         # (fires once per round, on the first group to reach this point;
@@ -327,7 +421,12 @@ class ServingEngine:
                 self._prefetch_pending)
 
         # ---- phase C: decode --------------------------------------------
-        outputs, cache, dt_dec = self._decode(res.logits, res.cache, N, S)
+        if use_paged:
+            outputs, cache, dt_dec = self._decode_paged(
+                res.logits, res.cache, N, S, gaids)
+        else:
+            outputs, cache, dt_dec = self._decode_dense(
+                res.logits, res.cache, N, S)
         stats.t_decode += dt_dec
 
         # ---- phase D: bookkeeping / storage -----------------------------
@@ -342,13 +441,33 @@ class ServingEngine:
         return [(a, outputs[i], logits_np[i]) for i, a in enumerate(gaids)]
 
     # ------------------------------------------------------------------
-    def _persistent_bytes(self) -> int:
-        total = 0
+    def _replay_fallback_blocks(self, rnd: Round) -> Dict[str, np.ndarray]:
+        """Trace replay blocks keyed by agent id, for agents with no
+        output yet in generate mode. ``rnd.tasks`` preserves the trace's
+        agent order, so block j belongs to agent_ids[j] — keying by id
+        (rather than by position in ``self.sessions`` iteration order)
+        keeps the pairing correct however the engine enumerates
+        sessions."""
+        return dict(zip(rnd.tasks, list(rnd.shared_blocks)))
+
+    # ------------------------------------------------------------------
+    def _persistent_split(self) -> Tuple[int, int]:
+        """Persistent footprint per tier: (device_bytes, host_bytes).
+        Spilled persistent entries still hold the round's reusable state
+        — the spill moved bytes, it didn't drop them — so both tiers
+        count toward the total the admission planner reasons about."""
+        dev = 0
         for owner in self.pool.owners():
             a = self.pool._allocs[owner]
             if a.persistent:
-                total += a.n_pages * self.pool.page_bytes()
-        return total
+                dev += a.n_pages * self.pool.page_bytes()
+        host = sum(e.n_pages for e in self.manager.host._entries.values()
+                   if e.persistent) * self.pool.page_bytes()
+        return dev, host
+
+    def _persistent_bytes(self) -> int:
+        dev, host = self._persistent_split()
+        return dev + host
 
     # ------------------------------------------------------------------
     def serve(self, trace: AllGatherTrace,

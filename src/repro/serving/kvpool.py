@@ -116,6 +116,27 @@ class PagedKVPool:
         return self.alloc(owner, self.pages_for_tokens(n_tokens),
                           persistent=persistent)
 
+    def append_page(self, owner: str) -> int:
+        """Claim ONE more free page for an existing allocation and return
+        its id — the decode loop's grow path: ``round:<aid>`` starts at
+        the prompt's pages and claims a fresh page each time generation
+        crosses a block boundary (the page then fills slot by slot across
+        steps and is sealed when the next append happens). Raises
+        :class:`KeyError` for an unknown owner and :class:`PoolExhausted`
+        when the free list is dry — the manager layers eviction on top.
+        """
+        a = self._allocs.get(owner)
+        if a is None:
+            raise KeyError(
+                f"append_page: owner {owner!r} has no live allocation")
+        if not self._free:
+            raise PoolExhausted(
+                f"{owner}: need 1 more page, free 0/{self.n_pages}")
+        page = self._free.pop()
+        a.pages = np.append(a.pages, np.int32(page))
+        self.peak_pages = max(self.peak_pages, self.used_pages())
+        return page
+
     def free(self, owner: str) -> None:
         """Return ``owner``'s pages to the free list (no-op if absent)."""
         a = self._allocs.pop(owner, None)

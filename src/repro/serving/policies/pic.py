@@ -32,6 +32,7 @@ from repro.serving.policies.base import (
     entry_spillable,
     register_policy,
 )
+from repro.serving.round_kv import round_kv
 
 
 @register_policy("pic")
@@ -218,33 +219,37 @@ class PICPolicy(ReusePolicy):
         return RecoveryResult(logits, {"k": k, "v": v}, dt, info)
 
     # ------------------------------------------------------------- store
-    def _store_output_segments(self, ctx: RoundContext, kc, vc,
+    def _store_output_segments(self, ctx: RoundContext, kv,
                                outputs: np.ndarray) -> None:
-        """Each agent's output block O_i, shared next round (§4.1)."""
+        """Each agent's output block O_i, shared next round (§4.1).
+        ``kv`` is a round-KV view — the output-block slice is a page
+        gather when the decode ran paged, a plain slice when dense."""
         rt = self.rt
         S, G = ctx.prompt_len, rt.gen_len
+        ok, ov = kv.slice(S, S + G)       # [L, N, G, KV, hd]
         for i, a in enumerate(ctx.agent_ids):
             sid = segment_hash(outputs[i])
             rt.segment_index.put(SegmentCacheEntry(
-                sid=sid, k=kc[:, i, S : S + G], v=vc[:, i, S : S + G],
+                sid=sid, k=ok[:, i], v=ov[:, i],
                 src_pos=np.arange(S, S + G, dtype=np.int32),
                 producer=a, round_idx=ctx.round_idx))
 
     def store(self, ctx: RoundContext, cache: dict, outputs: np.ndarray,
               result: RecoveryResult, stats) -> None:
-        if "k" not in cache:
+        kv = round_kv(cache)
+        if kv is None:
             return
         rt = self.rt
-        kc, vc = cache["k"], cache["v"]   # [L, N, S+G, KV, hd]
         S, G = ctx.prompt_len, rt.gen_len
         hspan = ctx.layouts[0].spans[0]
-        self._store_output_segments(ctx, kc, vc, outputs)
-        # CacheBlend keeps dense segment entries per agent
+        self._store_output_segments(ctx, kv, outputs)
+        # CacheBlend keeps dense segment entries per agent; only the kept
+        # regions (history span + output block) are ever gathered dense
+        hk_all, hv_all = kv.slice(hspan.start, hspan.end)
+        ok_all, ov_all = kv.slice(S, S + G)
         for i, a in enumerate(ctx.agent_ids):
-            hk = jnp.concatenate([kc[:, i, hspan.start : hspan.end],
-                                  kc[:, i, S : S + G]], axis=1)
-            hv = jnp.concatenate([vc[:, i, hspan.start : hspan.end],
-                                  vc[:, i, S : S + G]], axis=1)
+            hk = jnp.concatenate([hk_all[:, i], ok_all[:, i]], axis=1)
+            hv = jnp.concatenate([hv_all[:, i], ov_all[:, i]], axis=1)
             sp = np.concatenate([
                 np.arange(hspan.start, hspan.end, dtype=np.int32),
                 np.arange(S, S + G, dtype=np.int32)])

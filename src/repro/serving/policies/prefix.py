@@ -17,6 +17,7 @@ from repro.serving.policies.base import (
     register_policy,
 )
 from repro.serving.pool import Spillable
+from repro.serving.round_kv import round_kv
 
 
 def _common_prefix(a: np.ndarray, b: np.ndarray) -> int:
@@ -90,10 +91,13 @@ class PrefixCachePolicy(ReusePolicy):
 
     def store(self, ctx: RoundContext, cache: dict, outputs: np.ndarray,
               result: RecoveryResult, stats) -> None:
-        if "k" not in cache:
+        kv = round_kv(cache)
+        if kv is None:
             return
         rt = self.rt
-        kc, vc = cache["k"], cache["v"]   # [L, N, S+G, KV, hd]
+        # dense session caches ARE this policy's storage design, so the
+        # full-cache gather (a no-op for a dense round) is intentional
+        kc, vc = kv.dense()               # [L, N, S+G, KV, hd]
         S, G = ctx.prompt_len, rt.gen_len
         for i, a in enumerate(ctx.agent_ids):
             s = rt.sessions[a]

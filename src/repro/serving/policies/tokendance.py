@@ -24,6 +24,7 @@ from repro.serving.policies.base import (RecoveryResult, RoundContext,
                                          entry_spillable, register_policy)
 from repro.serving.policies.pic import PICPolicy
 from repro.serving.pool import Spillable
+from repro.serving.round_kv import round_kv
 
 
 def _master_spillable(master: MasterCache) -> Spillable:
@@ -280,22 +281,25 @@ class TokenDancePolicy(PICPolicy):
     # ------------------------------------------------------------- store
     def store(self, ctx: RoundContext, cache: dict, outputs: np.ndarray,
               result: RecoveryResult, stats) -> None:
-        if "k" not in cache:
+        kv = round_kv(cache)
+        if kv is None:
             return
         rt = self.rt
-        kc, vc = cache["k"], cache["v"]   # [L, N, S+G, KV, hd]
         S, G = ctx.prompt_len, rt.gen_len
         aids = ctx.agent_ids
         hspan = ctx.layouts[0].spans[0]
-        self._store_output_segments(ctx, kc, vc, outputs)
+        self._store_output_segments(ctx, kv, outputs)
 
         # Master-Mirror compression of the round family over the prefill
         # region [0, S); the decode tails are the O_i segments extracted
-        # above (irreducible new content, stored once and shared)
+        # above (irreducible new content, stored once and shared). A
+        # paged decode gathers exactly this region out of the round pool
+        # — the gen pages never materialize beyond the O_i slice above.
         plan = result.info.get("plan")
         master_idx = plan.master if plan is not None else 0
-        ks = jnp.swapaxes(kc[:, :, :S], 0, 1)   # [N, L, S, KV, hd]
-        vs = jnp.swapaxes(vc[:, :, :S], 0, 1)
+        pk_all, pv_all = kv.slice(0, S)         # [L, N, S, KV, hd]
+        ks = jnp.swapaxes(pk_all, 0, 1)         # [N, L, S, KV, hd]
+        vs = jnp.swapaxes(pv_all, 0, 1)
         master, handles = build_round_family(
             aids, ks, vs, np.arange(S), master_idx,
             block_tokens=rt.block_select or 32)

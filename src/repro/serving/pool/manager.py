@@ -131,6 +131,18 @@ class PoolManager:
         return self.alloc(owner, self.pool.pages_for_tokens(n_tokens),
                           persistent=persistent, spillable=spillable)
 
+    def append_page(self, owner: str) -> int:
+        """Grow an existing allocation by one page (the decode loop's
+        per-block-boundary claim), evicting cold owners on pressure like
+        :meth:`alloc`."""
+        try:
+            page = self.pool.append_page(owner)
+        except PoolExhausted:
+            self._make_room(1)
+            page = self.pool.append_page(owner)
+        self.touch(owner)
+        return page
+
     def free(self, owner: str) -> None:
         """Drop an owner from every tier (device pages, host entry,
         spill registration, prefetch stamp)."""

@@ -1,0 +1,181 @@
+"""Decode-attention parity: the single-token kernels (dense and paged)
+against the jnp oracle and against each other, in interpret mode on CPU.
+
+The contract mirrors test_kernels.py's prefill-paged suite: on shared
+tile boundaries (block-aligned span, tile size == page size) the paged
+decode kernel must equal the dense decode kernel BIT-FOR-BIT — paging
+changes where a KV tile is fetched from, never what is computed on it —
+while ragged shapes are checked against the gather-then-attend oracle
+within float tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_decode import flash_decode_kernel
+
+
+def _rand(shape, dtype, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32
+                             ).astype(dtype)
+
+
+def _tol(dtype, atol32=2e-5):
+    return (dict(atol=atol32, rtol=2e-5) if dtype == jnp.float32
+            else dict(atol=2e-2, rtol=2e-2))
+
+
+# ------------------------------------------------------------ dense decode
+@pytest.mark.parametrize("H,KV,Sk,hd", [
+    (4, 2, 45, 64),     # GQA, ragged Sk
+    (4, 4, 300, 64),    # H == KV, multi-tile ragged
+    (8, 2, 128, 32),    # block-aligned
+    (2, 1, 1, 64),      # single key (round position 0 edge)
+])
+@pytest.mark.parametrize("window", [0, 17])
+def test_flash_decode_vs_oracle(H, KV, Sk, hd, window):
+    q = _rand((H, 1, hd), jnp.float32, seed=1)
+    k = _rand((KV, Sk, hd), jnp.float32, seed=2)
+    v = _rand((KV, Sk, hd), jnp.float32, seed=3)
+    got = ops.flash_decode(q, k, v, window=window, block_k=128)
+    exp = ref.flash_decode_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.float32(got), np.float32(exp),
+                               **_tol(jnp.float32))
+
+
+def test_flash_decode_matches_full_prefill_row():
+    """Decoding position Sk-1 must agree with the last row of a full
+    (causal) prefill over the same KV — the decode kernel is the
+    recurrence restarted at one query."""
+    H, KV, Sk, hd = 4, 2, 96, 64
+    k = _rand((KV, Sk, hd), jnp.float32, seed=4)
+    v = _rand((KV, Sk, hd), jnp.float32, seed=5)
+    qfull = _rand((H, Sk, hd), jnp.float32, seed=6)
+    full = ops.flash_prefill(qfull, k, v, causal=True)
+    got = ops.flash_decode(qfull[:, -1:], k, v)
+    np.testing.assert_allclose(np.float32(got[:, 0]),
+                               np.float32(full[:, -1]),
+                               **_tol(jnp.float32))
+
+
+def test_flash_decode_kernel_direct_padded():
+    """The raw kernel with pre-padded operands: padded tail keys are
+    exact no-ops (kv_len mask only, no run-skip), so padding must not
+    perturb the result at all."""
+    H, KV, Sk, hd, bk = 4, 2, 45, 64, 32
+    q = jnp.pad(_rand((H, 1, hd), jnp.float32, seed=7), ((0, 0), (0, 7), (0, 0)))
+    k = _rand((KV, Sk, hd), jnp.float32, seed=8)
+    v = _rand((KV, Sk, hd), jnp.float32, seed=9)
+    Skp = -(-Sk // bk) * bk
+    pad = ((0, 0), (0, Skp - Sk), (0, 0))
+    tight = flash_decode_kernel(q, jnp.pad(k, pad), jnp.pad(v, pad),
+                                kv_len=Sk, block_k=bk, interpret=True)
+    extra = ((0, 0), (0, Skp + 2 * bk - Sk), (0, 0))
+    loose = flash_decode_kernel(q, jnp.pad(k, extra), jnp.pad(v, extra),
+                                kv_len=Sk, block_k=bk, interpret=True)
+    np.testing.assert_array_equal(np.asarray(tight), np.asarray(loose))
+    exp = ref.flash_decode_ref(q[:, :1], k, v)
+    np.testing.assert_allclose(np.float32(tight[:, :1]), np.float32(exp),
+                               **_tol(jnp.float32))
+
+
+# ------------------------------------------------------------ paged decode
+def _paged_decode_case(nbh, bt, KV, hd, T, *, H=4, n_extra_pages=3,
+                       dtype=jnp.float32, seed=0, share_from=None):
+    """A pool + page table (+ dense tail) and the single query attending
+    at position span+T-1 — the decode-step analogue of
+    test_kernels._paged_attn_case."""
+    rng = np.random.default_rng(seed)
+    P = nbh + n_extra_pages
+    pool_k = _rand((P, bt, KV, hd), dtype, seed=seed + 10)
+    pool_v = _rand((P, bt, KV, hd), dtype, seed=seed + 11)
+    pidx = np.asarray(rng.permutation(P)[:nbh], np.int32)
+    if share_from is not None:
+        pidx[: nbh // 2] = share_from[: nbh // 2]
+    span = nbh * bt
+    q = _rand((H, 1, hd), dtype, seed=seed + 12)
+    tail_k = _rand((T, KV, hd), dtype, seed=seed + 13) if T else None
+    tail_v = _rand((T, KV, hd), dtype, seed=seed + 14) if T else None
+    return q, pool_k, pool_v, jnp.asarray(pidx), tail_k, tail_v, span
+
+
+@pytest.mark.parametrize("nbh,bt,KV,hd,T", [
+    (4, 32, 2, 64, 32),     # GQA H=4 != KV=2, full-page tail
+    (2, 32, 4, 32, 0),      # zero-length tail, H == KV
+    (1, 64, 1, 128, 64),    # single page
+])
+@pytest.mark.parametrize("window", [0, 100])
+def test_flash_decode_paged_bitexact_vs_dense(nbh, bt, KV, hd, T, window):
+    """Block-aligned span, tile size == page size: the paged decode
+    kernel must equal the dense decode kernel on the gathered KV
+    bit-for-bit."""
+    q, pk, pv, pidx, tk, tv, span = _paged_decode_case(nbh, bt, KV, hd, T,
+                                                       H=4 if KV != 4 else 4)
+    got = ops.flash_decode_paged(q, pk, pv, pidx, tk, tv, span_len=span,
+                                 window=window)
+    kd, vd = ref.paged_kv_ref(pk, pv, pidx, tk, tv, span)
+    dense = ops.flash_decode(q, kd, vd, window=window, block_k=bt)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(dense))
+
+
+@pytest.mark.parametrize("span_off,T", [(0, 32), (-5, 32), (-5, 13), (0, 13)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_paged_ragged_sweep(span_off, T, dtype):
+    """Ragged span lengths (last page partially valid) and mid-page
+    tails against the gather-then-attend oracle."""
+    nbh, bt, KV, hd = 3, 32, 2, 64
+    q, pk, pv, pidx, tk, tv, span = _paged_decode_case(
+        nbh, bt, KV, hd, T, dtype=dtype, seed=3)
+    span = span + span_off
+    got = ops.flash_decode_paged(q, pk, pv, pidx, tk, tv, span_len=span)
+    exp = ref.flash_decode_paged_ref(q, pk, pv, pidx, tk, tv, span_len=span)
+    np.testing.assert_allclose(np.float32(got), np.float32(exp), **_tol(dtype))
+
+
+def test_flash_decode_paged_page_aliasing():
+    """Two tables over one pool (the family case): clean mirror blocks
+    aliased onto Master pages attend over the Master's values there."""
+    nbh, bt, KV, hd, T = 4, 32, 2, 64, 32
+    q, pk, pv, master_idx, tk, tv, span = _paged_decode_case(
+        nbh, bt, KV, hd, T, seed=5)
+    _, _, _, mirror_idx, _, _, _ = _paged_decode_case(
+        nbh, bt, KV, hd, T, seed=6, share_from=np.asarray(master_idx))
+    for pidx in (master_idx, mirror_idx):
+        got = ops.flash_decode_paged(q, pk, pv, pidx, tk, tv, span_len=span)
+        kd, vd = ref.paged_kv_ref(pk, pv, pidx, tk, tv, span)
+        np.testing.assert_array_equal(
+            np.asarray(got),
+            np.asarray(ops.flash_decode(q, kd, vd, block_k=bt)))
+    assert not np.array_equal(np.asarray(master_idx), np.asarray(mirror_idx))
+
+
+def test_flash_decode_paged_windowed_tail():
+    """A window small enough to exclude every pool page still runs the
+    tail tiles (the tile containing qpos always executes)."""
+    nbh, bt, KV, hd, T = 4, 32, 2, 64, 32
+    q, pk, pv, pidx, tk, tv, span = _paged_decode_case(nbh, bt, KV, hd, T,
+                                                       seed=9)
+    window = 16   # < tail length: only tail keys are visible
+    got = ops.flash_decode_paged(q, pk, pv, pidx, tk, tv, span_len=span,
+                                 window=window)
+    exp = ref.flash_decode_paged_ref(q, pk, pv, pidx, tk, tv, span_len=span,
+                                     window=window)
+    np.testing.assert_allclose(np.float32(got), np.float32(exp),
+                               **_tol(jnp.float32))
+
+
+# --------------------------------------------------------- counted bytes
+def test_paged_decode_input_bytes_flat_in_span():
+    """The whole point of the paged decode step: per-step attention
+    INPUT traffic is O(tail + 1 page) — independent of the span behind
+    the page table — while the dense step streams the full S+G cache."""
+    bt, KV, hd = 32, 2, 64
+    sizes = []
+    for nbh in (4, 8, 16, 32):
+        pool = jnp.zeros((nbh + 1, bt, KV, hd), jnp.float32)
+        sizes.append(ops.paged_decode_input_bytes(pool, tail_len=17))
+    assert len(set(sizes)) == 1, sizes
+    dense_floor = 2 * (4 * bt) * KV * hd * 4   # smallest dense span
+    assert sizes[0] < dense_floor

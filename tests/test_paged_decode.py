@@ -1,0 +1,235 @@
+"""Paged decode (ISSUE 7): the engine's KV-never-densifies round.
+
+Three layers of pinning:
+
+1. **Bit-exactness** — serving a trace with ``paged_decode=True`` must be
+   indistinguishable (outputs, first logits, persistent bytes) from the
+   dense decode loop, for every policy whose store path was converted to
+   round-KV views.
+2. **No densify on the fast path** — a monkeypatch spy asserts the
+   tokendance paged round calls neither :meth:`ServingEngine._decode_dense`
+   nor :meth:`PagedRoundKV.dense` (the full-cache oracle gather), while
+   ``paged_decode=False`` still routes through the dense loop.
+3. **The ride-along bugfixes** — zero-kwarg engine construction,
+   host-tier-aware persistent accounting, and the agent-id-keyed replay
+   fallback.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.rounds import Round, generate_trace
+from repro.models import init_params
+from repro.serving import (
+    PagedKVPool,
+    PagedRoundKV,
+    PoolExhausted,
+    PoolManager,
+    ServingEngine,
+    Spillable,
+)
+
+N_AGENTS = 3
+N_ROUNDS = 2
+GEN = 32
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen2.5-7b").replace(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _trace(cfg, n_rounds=N_ROUNDS):
+    return generate_trace("generative_agents", N_AGENTS, n_rounds,
+                          cfg.vocab_size, seed=11, jitter_hist=False)
+
+
+def _serve(params, cfg, policy, *, paged, **kw):
+    eng = ServingEngine(params, cfg, policy, gen_len=GEN,
+                        recompute_ratio=0.1, keep_logits=True,
+                        paged_decode=paged, **kw)
+    return eng, eng.serve(_trace(cfg))
+
+
+# ----------------------------------------------------- engine bit-exactness
+@pytest.mark.parametrize("policy", ["tokendance", "pic", "prefix"])
+def test_engine_bitexact_paged_vs_dense(setup, policy):
+    cfg, params = setup
+    _, p = _serve(params, cfg, policy, paged=True)
+    _, d = _serve(params, cfg, policy, paged=False)
+    for r in range(N_ROUNDS):
+        np.testing.assert_array_equal(p[r].outputs, d[r].outputs)
+        np.testing.assert_array_equal(p[r].first_logits, d[r].first_logits)
+        assert p[r].persistent_bytes == d[r].persistent_bytes, (policy, r)
+
+
+def test_paged_round_never_densifies(setup, monkeypatch):
+    """The spy: a tokendance paged round must touch neither the dense
+    decode loop nor the full-cache page gather — KV stays paged from the
+    collector through store()."""
+    cfg, params = setup
+    calls = []
+    orig_dense = ServingEngine._decode_dense
+    orig_gather = PagedRoundKV.dense
+
+    def spy_decode(self, *a, **kw):
+        calls.append("decode_dense")
+        return orig_dense(self, *a, **kw)
+
+    def spy_gather(self):
+        calls.append("kv_dense")
+        return orig_gather(self)
+
+    monkeypatch.setattr(ServingEngine, "_decode_dense", spy_decode)
+    monkeypatch.setattr(PagedRoundKV, "dense", spy_gather)
+    _serve(params, cfg, "tokendance", paged=True)
+    assert calls == [], calls
+    # the knob still selects the dense loop (the oracle stays reachable)
+    _serve(params, cfg, "tokendance", paged=False)
+    assert "decode_dense" in calls
+
+
+def test_round_kv_view_slices_match():
+    """PagedRoundKV.slice == the dense rows it abstracts, including
+    non-page-aligned bounds."""
+    from repro.serving import DenseRoundKV, round_kv
+
+    rng = np.random.default_rng(0)
+    L, N, nbt, bt, KV, hd = 2, 3, 4, 8, 2, 16
+    pool = jnp.asarray(rng.normal(size=(L, N * nbt + 2, bt, KV, hd)),
+                       jnp.float32)
+    pidx = jnp.asarray(rng.permutation(N * nbt + 2)[: N * nbt]
+                       .reshape(N, nbt).astype(np.int32))
+    paged = round_kv({"pk": pool, "pv": pool + 1.0, "page_idx": pidx})
+    assert isinstance(paged, PagedRoundKV)
+    kd, vd = paged.dense()
+    dense = DenseRoundKV(kd, vd)
+    for lo, hi in [(0, nbt * bt), (bt, 3 * bt), (5, 19), (0, 1)]:
+        pk, pv = paged.slice(lo, hi)
+        ek, ev = dense.slice(lo, hi)
+        np.testing.assert_array_equal(np.asarray(pk), np.asarray(ek))
+        np.testing.assert_array_equal(np.asarray(pv), np.asarray(ev))
+    assert round_kv({"ssm": None}) is None
+
+
+# ------------------------------------------------------------- append_page
+def _pool(n_pages=8):
+    cfg = get_smoke_config("qwen2.5-7b")
+    return PagedKVPool(cfg, n_pages=n_pages)
+
+
+def test_append_page_requires_live_owner():
+    pool = _pool()
+    with pytest.raises(KeyError, match="no live allocation"):
+        pool.append_page("round:ghost")
+
+
+def test_append_page_grows_allocation_and_peak():
+    pool = _pool(8)
+    a = pool.alloc("round:a", 2, persistent=False)
+    assert pool.peak_pages == 2
+    page = pool.append_page("round:a")
+    assert a.n_pages == 3 and int(a.pages[-1]) == page
+    assert pool.used_pages() == 3 and pool.peak_pages == 3
+    assert page not in pool._free
+    pool.free("round:a")
+    assert pool.free_pages == 8
+
+
+def test_append_page_exhausted():
+    pool = _pool(2)
+    pool.alloc("round:a", 2, persistent=False)
+    with pytest.raises(PoolExhausted, match="need 1 more page"):
+        pool.append_page("round:a")
+
+
+def test_manager_append_page_evicts_cold_owner():
+    """Pressure during per-step growth spills cold persistent state,
+    exactly like a fresh alloc would."""
+    pool = _pool(8)
+    mgr = PoolManager(pool)
+    k = jnp.ones((4, 8), jnp.float32)
+    box = {"k": k, "v": k + 1}
+
+    def put(arrs):
+        box["k"], box["v"] = arrs
+
+    mgr.alloc("hist:a", 4, persistent=True,
+              spillable=Spillable(lambda: (box["k"], box["v"]), put))
+    mgr.alloc("round:x", 4, persistent=False)
+    mgr.begin_round(1)
+    page = mgr.append_page("round:x")
+    assert "hist:a" in mgr.host           # spilled to make room
+    assert pool._allocs["round:x"].n_pages == 5
+    assert 0 <= page < pool.n_pages
+    mgr.check()
+
+
+# ------------------------------------------------------- ride-along fixes
+def test_engine_constructs_with_all_default_kwargs(setup):
+    """Regression: gen_len=16 default tripped the engine's own
+    block-alignment assert against block_select=32."""
+    cfg, params = setup
+    eng = ServingEngine(params, cfg)
+    assert eng.gen_len % eng.block_select == 0
+    assert eng.gen_len == 32
+
+
+def test_persistent_bytes_survive_spill(setup):
+    """Regression: spilling a persistent owner must not make its bytes
+    vanish from the persistent footprint — the host tier counts too, and
+    the device/host split is reported in reuse['pool']."""
+    cfg, params = setup
+    eng, stats = _serve(params, cfg, "tokendance", paged=True)
+    pool_info = stats[-1].reuse["pool"]
+    assert (pool_info["persistent_device_bytes"]
+            + pool_info["persistent_host_bytes"]
+            == stats[-1].persistent_bytes)
+    total = eng._persistent_bytes()
+    dev0, host0 = eng._persistent_split()
+    assert total == dev0 + host0 and dev0 > 0
+    # spill one persistent, spill-registered owner by hand
+    victim = next(o for o in eng.manager._spillables
+                  if o in eng.pool._allocs
+                  and eng.pool._allocs[o].persistent)
+    n_pages = eng.pool._allocs[victim].n_pages
+    assert eng.manager.spill(victim)
+    dev1, host1 = eng._persistent_split()
+    assert eng._persistent_bytes() == total          # conserved across tiers
+    assert host1 == host0 + n_pages * eng.pool.page_bytes()
+    assert dev1 == dev0 - n_pages * eng.pool.page_bytes()
+
+
+def test_replay_fallback_keyed_by_agent_id(setup):
+    """Regression: the generate-mode fallback paired trace blocks with
+    agents by position in ``self.sessions`` iteration order; an engine
+    whose session dict is ordered differently from the trace handed
+    agents each other's blocks."""
+    cfg, params = setup
+    trace = _trace(cfg)
+    eng = ServingEngine(params, cfg, "tokendance", gen_len=GEN)
+    eng.init_agents(trace)
+    # scramble session iteration order relative to the trace
+    eng.sessions = dict(reversed(list(eng.sessions.items())))
+    assert list(eng.sessions) != trace.agent_ids
+    rnd = trace.rounds[1]
+    fallback = eng._replay_fallback_blocks(rnd)
+    assert list(fallback) == trace.agent_ids
+    for j, a in enumerate(trace.agent_ids):
+        np.testing.assert_array_equal(fallback[a], rnd.shared_blocks[j])
+    # agents with an output keep it; only the deferred agent falls back
+    first = trace.agent_ids[0]
+    eng.round_idx = 1
+    eng.last_outputs = {a: np.full(GEN, i, np.int32)
+                        for i, a in enumerate(trace.agent_ids) if a != first}
+    shared = [eng.last_outputs.get(a, fallback.get(a))
+              for a in eng.sessions]
+    by_agent = dict(zip(eng.sessions, shared))
+    np.testing.assert_array_equal(by_agent[first], rnd.shared_blocks[0])
+    for i, a in enumerate(trace.agent_ids):
+        if a != first:
+            np.testing.assert_array_equal(by_agent[a], np.full(GEN, i))

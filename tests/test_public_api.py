@@ -46,6 +46,10 @@ SERVING_API = {
     "PrefetchPlanner",
     "Spillable",
     "get_eviction_policy",
+    # round-KV views (ISSUE 7)
+    "DenseRoundKV",
+    "PagedRoundKV",
+    "round_kv",
 }
 
 CORE_API = {
