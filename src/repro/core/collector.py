@@ -40,6 +40,11 @@ class ReusePlan:
     deviations: np.ndarray       # [N] total per-request deviation
     prompt_len: int
     n_sel: int
+    #: [N, n_sel] per-request recomputed positions — the store path reads
+    #: this to know exactly which blocks of each recovered cache differ
+    #: from what the previous round's restore produced (the cross-round
+    #: incremental restore's dirty set); None on the serial path
+    sel_idx_all: Optional[np.ndarray] = None
 
     def mirror_indices(self) -> List[int]:
         return [i for i in range(len(self.request_ids)) if i != self.master]
@@ -391,7 +396,8 @@ class KVCollector:
             jnp.where(shared_mask[None], res.deviation, 0.0), axis=1))
         master = int(np.argmin(dev))  # closest to the group's common structure
         plan = ReusePlan(list(request_ids), master,
-                         np.asarray(res.sel_idx[0]), dev, S, n_sel)
+                         np.asarray(res.sel_idx[0]), dev, S, n_sel,
+                         sel_idx_all=np.asarray(res.sel_idx))
         return CollectiveResult(plan, res)
 
     # ------------------------------------------------------------------

@@ -208,44 +208,54 @@ def build_round_family(
 
 
 def trim_family(handles: Sequence[MirrorHandle],
-                seq_len: int) -> List[MirrorHandle]:
-    """Restrict a Master family to its first ``seq_len`` tokens.
+                seq_len: int, *, start: int = 0) -> List[MirrorHandle]:
+    """Restrict a Master family to the token span ``[start, seq_len)``.
 
     Restore work then covers only the blocks a consumer will actually
-    read (e.g. the serving engine's history span, a prefix of the round's
-    prompt): the trimmed Master keeps ``ceil(seq_len / bt)`` blocks and
-    each mirror keeps only the diff blocks that fall inside them, so the
-    page-sharing restore pool shrinks from ``nb + M*ndb`` to
-    ``nbh + M*ndb_h`` pages. Within the kept span the restored values are
-    bit-identical to restoring the full family and slicing.
+    read: with the default ``start=0`` that is a prefix (e.g. the serving
+    engine's history span) — the trimmed Master keeps
+    ``ceil(seq_len / bt)`` blocks and each mirror keeps only the diff
+    blocks that fall inside them, so the page-sharing restore pool
+    shrinks from ``nb + M*ndb`` to ``nbh + M*ndb_h`` pages. A non-zero
+    ``start`` (block-aligned) trims to a *delta* span instead: the
+    cross-round incremental restore uses this to restore only the
+    ``[H_{r-1}, H_r)`` tokens a round appended to each history, with
+    block indices re-based so the trimmed family is self-contained.
+    Within the kept span the restored values are bit-identical to
+    restoring the full family and slicing.
     """
     assert handles, "empty family"
     master = handles[0].master
     bt = handles[0].diff.block_tokens
     full = handles[0].diff.seq_len
-    assert 0 < seq_len <= full, (seq_len, full)
+    assert 0 <= start < seq_len <= full, (start, seq_len, full)
+    assert start % bt == 0, \
+        (start, bt, "delta trim must start on a block boundary")
     for h in handles:
         assert h.master is master or h.diff.master_rid == master.rid, \
             "trim_family needs one shared Master"
         assert h.diff.block_tokens == bt and h.diff.seq_len == full, \
             "family mirrors must share block size and length"
-    if seq_len == full:
+    if seq_len == full and start == 0:
         return list(handles)
+    b0 = start // bt
     nbh = -(-seq_len // bt)
     tm = MasterCache(
-        rid=master.rid, k=master.k[:, :seq_len], v=master.v[:, :seq_len],
-        positions=np.asarray(master.positions[:seq_len], np.int32))
+        rid=master.rid, k=master.k[:, start:seq_len],
+        v=master.v[:, start:seq_len],
+        positions=np.asarray(master.positions[start:seq_len], np.int32))
     out = []
     for h in handles:
         d = h.diff
-        keep = np.flatnonzero(np.asarray(d.block_idx) < nbh)
+        bidx = np.asarray(d.block_idx)
+        keep = np.flatnonzero((bidx >= b0) & (bidx < nbh))
         out.append(MirrorHandle(tm, MirrorDiff(
             rid=d.rid, master_rid=d.master_rid,
-            block_idx=np.asarray(d.block_idx)[keep].astype(np.int32),
+            block_idx=(bidx[keep] - b0).astype(np.int32),
             k_vals=d.k_vals[:, keep], v_vals=d.v_vals[:, keep],
-            old_pos=np.asarray(d.old_pos[:seq_len], np.int32),
-            new_pos=np.asarray(d.new_pos[:seq_len], np.int32),
-            seq_len=seq_len, block_tokens=bt)))
+            old_pos=np.asarray(d.old_pos[start:seq_len], np.int32),
+            new_pos=np.asarray(d.new_pos[start:seq_len], np.int32),
+            seq_len=seq_len - start, block_tokens=bt)))
     return out
 
 

@@ -195,6 +195,35 @@ class PagedSegmentCacheEntry:
     def length(self) -> int:
         return self.seq_len + self.tail_len
 
+    @classmethod
+    def prefix_extension(cls, *, sid: str, pool_k, pool_v,
+                         prior_page_idx, delta_page_idx,
+                         src_pos, seq_len: int, block_tokens: int,
+                         tail_k=None, tail_v=None, producer: str = "",
+                         round_idx: int = -1) -> "PagedSegmentCacheEntry":
+        """Entry for a segment that prefix-extends a prior round's entry.
+
+        Agent histories grow strictly by appending (round r's history =
+        round r-1's history + the round's G output tokens), so the new
+        entry's page table is the prior entry's pages — reused in place,
+        possibly with a few copy-on-write replacements for blocks the
+        round recomputed — followed by a fresh *delta allocation* that
+        covers only the appended span. Restore work this round is the
+        delta pages; the prefix pages cross the round boundary unread
+        and unwritten.
+        """
+        prior = np.asarray(prior_page_idx, np.int32)
+        delta = np.asarray(delta_page_idx, np.int32)
+        page_idx = np.concatenate([prior, delta])
+        nbh = -(-seq_len // block_tokens)
+        assert page_idx.shape[0] == nbh, \
+            (prior.shape, delta.shape, seq_len, block_tokens,
+             "prefix + delta pages must tile the extended span exactly")
+        return cls(sid=sid, pool_k=pool_k, pool_v=pool_v,
+                   page_idx=page_idx, src_pos=src_pos, seq_len=seq_len,
+                   block_tokens=block_tokens, tail_k=tail_k, tail_v=tail_v,
+                   producer=producer, round_idx=round_idx)
+
     def materialize(self) -> SegmentCacheEntry:
         """Dense parity oracle: gather the pages (host-side) into the
         equivalent :class:`SegmentCacheEntry`. Tests and the dense

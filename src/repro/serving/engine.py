@@ -46,7 +46,7 @@ from repro.core.segments import PromptLayout, SegmentIndex
 from repro.models import decode_step, decode_step_paged
 from repro.serving.kvpool import PagedKVPool
 from repro.serving.planner import RoundPlan, RoundPlanner
-from repro.serving.pool import HostTier, PoolManager
+from repro.serving.pool import HostTier, PoolManager, parse_owner
 from repro.serving.policies import (
     PolicyRuntime,
     ReusePolicy,
@@ -360,11 +360,12 @@ class ServingEngine:
         if self._prefetch_pending:   # retry now that transients are free
             self.manager.prefetch(self._prefetch_pending)
             self._prefetch_pending = []
-        dev_bytes, host_bytes = self._persistent_split()
+        dev_bytes, host_bytes, cache_bytes = self._persistent_split()
         stats.persistent_bytes = dev_bytes + host_bytes
         pool_delta = self.manager.ledger.delta(ledger_before)
         pool_delta["persistent_device_bytes"] = dev_bytes
         pool_delta["persistent_host_bytes"] = host_bytes
+        pool_delta["restore_cache_bytes"] = cache_bytes
         stats.merge_reuse("pool", pool_delta)
         self.round_idx += 1
         return stats
@@ -451,22 +452,39 @@ class ServingEngine:
         return dict(zip(rnd.tasks, list(rnd.shared_blocks)))
 
     # ------------------------------------------------------------------
-    def _persistent_split(self) -> Tuple[int, int]:
-        """Persistent footprint per tier: (device_bytes, host_bytes).
+    def _persistent_split(self) -> Tuple[int, int, int]:
+        """Footprint per class: (device_bytes, host_bytes, cache_bytes).
         Spilled persistent entries still hold the round's reusable state
         — the spill moved bytes, it didn't drop them — so both tiers
-        count toward the total the admission planner reasons about."""
+        count toward the total the admission planner reasons about.
+        ``hist:family:`` (histpool) owners are carved out into
+        cache_bytes: the cross-round restore pool is RECONSTRUCTIBLE —
+        dropping it costs one full family restore, never correctness —
+        so it is a resident accelerator cache, not part of the storage
+        the compression claim is about (both tiers, same rationale)."""
         dev = 0
+        cache = 0
+        pb = self.pool.page_bytes()
         for owner in self.pool.owners():
             a = self.pool._allocs[owner]
-            if a.persistent:
-                dev += a.n_pages * self.pool.page_bytes()
-        host = sum(e.n_pages for e in self.manager.host._entries.values()
-                   if e.persistent) * self.pool.page_bytes()
-        return dev, host
+            if not a.persistent:
+                continue
+            if parse_owner(owner).kind == "histpool":
+                cache += a.n_pages * pb
+            else:
+                dev += a.n_pages * pb
+        host = 0
+        for owner, e in self.manager.host._entries.items():
+            if not e.persistent:
+                continue
+            if parse_owner(owner).kind == "histpool":
+                cache += e.n_pages * pb
+            else:
+                host += e.n_pages * pb
+        return dev, host, cache
 
     def _persistent_bytes(self) -> int:
-        dev, host = self._persistent_split()
+        dev, host, _ = self._persistent_split()
         return dev + host
 
     # ------------------------------------------------------------------
@@ -521,7 +539,7 @@ class MultiAgentEngine(ServingEngine):
 
     def __init__(self, params: dict, cfg: ModelConfig, mode: str, *,
                  paged_history: bool = True, paged_attention: bool = True,
-                 **kw):
+                 incremental: bool = True, **kw):
         warnings.warn(
             "MultiAgentEngine(mode=...) is deprecated; pass a ReusePolicy "
             "to ServingEngine (e.g. ServingEngine(params, cfg, "
@@ -529,6 +547,7 @@ class MultiAgentEngine(ServingEngine):
             DeprecationWarning, stacklevel=2)
         assert mode in MODES, mode
         policy_kw = ({"paged_history": paged_history,
-                      "paged_attention": paged_attention}
+                      "paged_attention": paged_attention,
+                      "incremental": incremental}
                      if mode == "tokendance" else {})
         super().__init__(params, cfg, get_policy(mode, **policy_kw), **kw)

@@ -24,6 +24,7 @@ from repro.serving.policies.base import (RecoveryResult, RoundContext,
                                          entry_spillable, register_policy)
 from repro.serving.policies.pic import PICPolicy
 from repro.serving.pool import Spillable
+from repro.serving.pool.histpool import HistoryPagePool, PendingDelta
 from repro.serving.round_kv import round_kv
 
 
@@ -75,16 +76,36 @@ class TokenDancePolicy(PICPolicy):
     One Master family per gather group: ``masters`` is keyed by the
     group's member tuple, so grouped/neighborhood topologies compress
     each committee independently.
+
+    ``incremental=True`` (default, requires ``paged_history``) keeps each
+    family's restored history pages alive ACROSS rounds in a persistent
+    :class:`HistoryPagePool` (owner ``hist:family:<fam>``): agent i's
+    round-r history is a strict prefix-extension of its round r-1
+    history, so round r reuses round r-1's pages for the prefix and
+    restores only the round delta — the appended ``[H_{r-1}, H_r)`` span
+    (one ``trim_family(start=...)`` delta launch) plus the few prefix
+    blocks round r-1's recovery recomputed (copy-on-write from the
+    reuse plan's per-agent selection). Restore work per round is
+    O(round delta) instead of O(full history); outputs are bit-exact vs
+    the full restore (``incremental=False``) and the dense oracle. A
+    pool whose family Master was evicted, or whose span no longer
+    matches, is dropped and the next restore falls back to the full
+    path (which re-creates the pool); spilled pool pages are reloaded
+    through ``PoolManager.ensure_resident`` before any page is reused.
     """
 
     collective = True
 
     def __init__(self, paged_history: bool = True,
-                 paged_attention: bool = True) -> None:
+                 paged_attention: bool = True,
+                 incremental: bool = True) -> None:
         super().__init__()
         self.paged_history = paged_history
         self.paged_attention = paged_attention
+        self.incremental = incremental and paged_history
         self.masters: Dict[tuple, MasterCache] = {}
+        #: one persistent cross-round restore pool per Master family
+        self.hist_pools: Dict[tuple, HistoryPagePool] = {}
 
     # ---------------------------------------------------------- restore
     def _restore_histories(self, ctx: RoundContext):
@@ -140,8 +161,16 @@ class TokenDancePolicy(PICPolicy):
                        for a in members)
             gid = ctx.gid if len(families) == 1 else f"{ctx.gid}.f{fi}"
             if self.paged_history:
-                infos.append(self._restore_paged(
-                    ctx, gid, master, members, mirrors, span_len))
+                info = None
+                if self.incremental:
+                    info = self._restore_incremental(
+                        ctx, fam, master, members, mirrors, span_len)
+                if info is None:
+                    infos.append(self._restore_paged(
+                        ctx, gid, master, members, mirrors, span_len,
+                        fam=fam))
+                else:
+                    infos.append(info)
             else:
                 infos.append(self._restore_dense(
                     ctx, master, members, mirrors, span_len))
@@ -150,12 +179,22 @@ class TokenDancePolicy(PICPolicy):
 
     def _restore_paged(self, ctx: RoundContext, gid: str,
                        master: MasterCache,
-                       pending: list, mirrors: list, span_len: int) -> dict:
+                       pending: list, mirrors: list, span_len: int,
+                       fam: Optional[tuple] = None) -> dict:
         """One page-sharing family launch; entries reference the pool.
         The family is first TRIMMED to the history span — restore covers
         only the blocks recovery will read, so the pool holds
         ``nbh + M*ndb_h`` pages independent of the rest of the previous
-        prompt."""
+        prompt.
+
+        In incremental mode this full restore doubles as the pool
+        BOOTSTRAP (and the fallback after an invalidation): the built
+        pages persist in a :class:`HistoryPagePool` under the
+        ``hist:family:<fam>`` owner instead of the transient
+        ``restore:family:<gid>`` grant, seeded with a page table for
+        EVERY family member still compressed in this family (not just
+        the members restored now) so later rounds extend it with
+        deltas only."""
         from repro.core.diff_store import _pad_to_blocks, trim_family
         from repro.core.restore import (family_pool_pages,
                                         fused_restore_family_shared)
@@ -163,18 +202,31 @@ class TokenDancePolicy(PICPolicy):
         rt = self.rt
         cfg = rt.cfg
         L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
-        if mirrors:
+        persist = self.incremental and fam is not None
+        if persist:
+            self._drop_hist_pool(fam)
+            all_members = [a for a in fam if a in rt.sessions
+                           and rt.sessions[a].family == fam
+                           and rt.sessions[a].hist_pending is not None
+                           and rt.sessions[a].hist_pending[0] == span_len]
+            assert set(pending) <= set(all_members), (pending, all_members)
+        else:
+            all_members = pending
+        mirrors_all = [a for a in all_members
+                       if not rt.sessions[a].is_master]
+        if mirrors_all:
             handles = trim_family(
-                [rt.sessions[a].mirror for a in mirrors], span_len)
+                [rt.sessions[a].mirror for a in mirrors_all], span_len)
             bt = handles[0].diff.block_tokens
-            # claim the restore pool's pages from the manager BEFORE the
-            # launch — under pressure this evicts cold owners first —
-            # and hand the grant to the restore so it builds exactly the
-            # pages the ledger accounts
             n_pool = family_pool_pages(handles)
-            rt.pool_free(f"restore:family:{gid}")
-            rt.pool_alloc_tokens(f"restore:family:{gid}", n_pool * bt,
-                                 persistent=False)
+            if not persist:
+                # claim the restore pool's pages from the manager BEFORE
+                # the launch — under pressure this evicts cold owners
+                # first — and hand the grant to the restore so it builds
+                # exactly the pages the ledger accounts
+                rt.pool_free(f"restore:family:{gid}")
+                rt.pool_alloc_tokens(f"restore:family:{gid}", n_pool * bt,
+                                     persistent=False)
             pool_k, pool_v, page_idx = fused_restore_family_shared(
                 handles, n_pages=n_pool)
         else:
@@ -183,15 +235,28 @@ class TokenDancePolicy(PICPolicy):
             mk = _pad_to_blocks(master.k[:, :span_len], bt)
             mv = _pad_to_blocks(master.v[:, :span_len], bt)
             nb_ = mk.shape[1] // bt
-            rt.pool_free(f"restore:family:{gid}")
-            rt.pool_alloc_tokens(f"restore:family:{gid}", nb_ * bt,
-                                 persistent=False)
+            if not persist:
+                rt.pool_free(f"restore:family:{gid}")
+                rt.pool_alloc_tokens(f"restore:family:{gid}", nb_ * bt,
+                                     persistent=False)
             pool_k = mk.reshape(L, nb_, bt, KV, hd)
             pool_v = mv.reshape(L, nb_, bt, KV, hd)
             page_idx = np.zeros((0, nb_), np.int32)
         nb = -(-span_len // bt)
         master_row = np.arange(nb, dtype=np.int32)
-        mirror_row = {a: i for i, a in enumerate(mirrors)}
+        mirror_row = {a: i for i, a in enumerate(mirrors_all)}
+        if persist:
+            # the pages outlive the round: register the pool under its
+            # persistent family owner so it spills/reloads as a unit and
+            # competes in family-cost-aware eviction between rounds
+            tables = {a: (master_row if rt.sessions[a].is_master
+                          else page_idx[mirror_row[a]])
+                      for a in all_members}
+            hp = HistoryPagePool(fam, pool_k, pool_v, tables, span_len,
+                                 bt, ctx.round_idx)
+            self.hist_pools[fam] = hp
+            rt.pool_alloc(hp.owner, hp.capacity, persistent=True,
+                          spillable=hp.spillable())
         entry_bytes = 0
         dense_equiv = 0
         for a in pending:
@@ -220,6 +285,7 @@ class TokenDancePolicy(PICPolicy):
         page_b = 2 * L * bt * KV * hd * pool_k.dtype.itemsize
         return {
             "paged": True,
+            "incremental": False,           # full restore (O(S) pages)
             "n_restored": len(pending),
             "n_mirrors": len(mirrors),
             "nb": nb,                       # blocks per family member
@@ -229,6 +295,192 @@ class TokenDancePolicy(PICPolicy):
             "bytes_materialized": pool_bytes + entry_bytes,
             "dense_equiv_bytes": dense_equiv,
         }
+
+    # ------------------------------------------------ incremental restore
+    def _drop_hist_pool(self, fam: tuple) -> None:
+        """Invalidate a family's cross-round pool: forget the page tables
+        and release the persistent owner from every tier."""
+        pool = self.hist_pools.pop(fam, None)
+        if pool is not None:
+            self.rt.pool_free(pool.owner)
+
+    def _restore_incremental(self, ctx: RoundContext, fam: tuple,
+                             master: MasterCache, members: list,
+                             mirrors: list, span_len: int) -> Optional[dict]:
+        """O(round delta) restore from the family's persistent pool.
+
+        Returns the restore ledger, or None when no (valid) pool exists —
+        the caller then falls back to the full family restore, which
+        re-creates the pool. Validity: the pool must reach ``span_len``
+        (either it already sits there, or the pending delta recorded at
+        the last store advances it there) and must hold a page table for
+        every member being restored. The pool's pages may have been
+        spilled between rounds; ``ensure_resident`` reloads them (a
+        prefetch issued last round makes that a hit) BEFORE any page is
+        reused — the spill seam, not the pool, owns bit-exactness."""
+        rt = self.rt
+        pool = self.hist_pools.get(fam)
+        if pool is None:
+            return None
+        pend = pool.pending
+        valid = (all(a in pool.page_tables for a in members)
+                 and ((pend is None and pool.span_len == span_len)
+                      or (pend is not None
+                          and pend.h_prev == pool.span_len
+                          and pend.h_new == span_len)))
+        if not valid:
+            self._drop_hist_pool(fam)
+            return None
+        rt.ensure_resident(pool.owner)
+        bt = pool.block_tokens
+        nb_prev = pool.span_len // bt
+        new_span_pages = cow_pages = 0
+        grown0 = pool.grown_pages
+        if pend is not None:
+            new_span_pages, cow_pages = self._apply_pending(pool, fam,
+                                                            master)
+            # capacity may have grown (or stayed put with recycled COW
+            # pages) — re-account the persistent owner at its real size
+            rt.pool_free(pool.owner)
+            rt.pool_alloc(pool.owner, pool.capacity, persistent=True,
+                          spillable=pool.spillable())
+        assert pool.span_len == span_len, (pool.span_len, span_len)
+        cfg = rt.cfg
+        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+        nbh = -(-span_len // bt)
+        entry_bytes = 0
+        dense_equiv = 0
+        reused = set()
+        for a in members:
+            s = rt.sessions[a]
+            _, out_sid = s.hist_pending
+            out_e = rt.segment_index.get(out_sid)
+            row = pool.page_tables[a][:nbh]
+            reused.update(int(p) for p in row[:nb_prev])
+            sp = np.concatenate([np.arange(span_len, dtype=np.int32),
+                                 out_e.src_pos])
+            s.hist_entry = PagedSegmentCacheEntry.prefix_extension(
+                sid=f"hist:{a}:{ctx.round_idx}",
+                pool_k=pool.pool_k, pool_v=pool.pool_v,
+                prior_page_idx=row[:nb_prev],
+                delta_page_idx=row[nb_prev:nbh],
+                src_pos=sp, seq_len=span_len, block_tokens=bt,
+                tail_k=out_e.k, tail_v=out_e.v,
+                producer=a, round_idx=ctx.round_idx)
+            entry_bytes += s.hist_entry.nbytes()
+            dense_equiv += 2 * L * (span_len + out_e.k.shape[1]) * KV * hd \
+                * pool.pool_k.dtype.itemsize
+        pages_written = new_span_pages + cow_pages
+        page_b = 2 * L * bt * KV * hd * pool.pool_k.dtype.itemsize
+        return {
+            "paged": True,
+            "incremental": True,
+            "n_restored": len(members),
+            "n_mirrors": len(mirrors),
+            "nb": nbh,                       # blocks per family member
+            "pool_pages": pages_written,     # counted restore work
+            "pages_reused": len(reused),     # prefix pages NOT re-restored
+            "new_span_pages": new_span_pages,
+            "cow_pages": cow_pages,
+            "grown_pages": pool.grown_pages - grown0,
+            "full_write_pages": (len(mirrors) + 1) * nbh,  # un-shared cost
+            "page_bytes": page_b,
+            "bytes_materialized": pages_written * page_b + entry_bytes,
+            "dense_equiv_bytes": dense_equiv,
+        }
+
+    def _apply_pending(self, pool: HistoryPagePool, fam: tuple,
+                       master: MasterCache):
+        """Advance the pool from content(r-1) to content(r): restore the
+        appended ``[h_prev, h_new)`` span through a delta-trimmed family
+        launch (page sharing intact — the Master's delta blocks are
+        written once) and copy-on-write the dirty prefix blocks from the
+        round-r family. Every member's table advances together — also
+        members not being restored this round (admission may defer them;
+        their next restore then reuses the pool with a zero delta)."""
+        from repro.core.diff_store import _pad_to_blocks, trim_family
+        from repro.core.restore import fused_restore_family_shared
+
+        rt = self.rt
+        cfg = rt.cfg
+        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+        pend = pool.pending
+        bt = pool.block_tokens
+        h_prev, h_new = pend.h_prev, pend.h_new
+        nb_prev, nb_new = h_prev // bt, -(-h_new // bt)
+        fam_members = [a for a in fam if a in pool.page_tables]
+        mirror_members = [a for a in fam_members
+                          if not rt.sessions[a].is_master]
+        # --- appended span: ONE delta family launch into fresh pages ---
+        m_pages = pool.alloc_pages(nb_new - nb_prev)
+        if mirror_members:
+            handles = trim_family(
+                [rt.sessions[a].mirror for a in mirror_members],
+                h_new, start=h_prev)
+            M = len(handles)
+            ndb = max(1, max(h.diff.n_blocks for h in handles))
+            d_pages = pool.alloc_pages(M * ndb).reshape(M, ndb)
+            pool.pool_k, pool.pool_v, rows = fused_restore_family_shared(
+                handles, pool.pool_k, pool.pool_v,
+                master_map=m_pages, diff_maps=d_pages)
+            row_of = {a: np.asarray(rows[i], np.int32)
+                      for i, a in enumerate(mirror_members)}
+            allocated = np.concatenate([m_pages, d_pages.ravel()])
+            new_span_pages = (nb_new - nb_prev) + M * ndb
+        else:
+            mk = _pad_to_blocks(master.k[:, h_prev:h_new], bt)
+            mv = _pad_to_blocks(master.v[:, h_prev:h_new], bt)
+            nb_d = mk.shape[1] // bt
+            pool.write_pages(m_pages, mk.reshape(L, nb_d, bt, KV, hd),
+                             mv.reshape(L, nb_d, bt, KV, hd))
+            row_of = {}
+            allocated = m_pages
+            new_span_pages = nb_new - nb_prev
+        for a in fam_members:
+            row = (m_pages if rt.sessions[a].is_master else row_of[a])
+            pool.incref(row)
+            pool.page_tables[a] = np.concatenate(
+                [pool.page_tables[a], row]).astype(np.int32)
+        # padded diff rows of the launch that no table references are
+        # immediately reusable
+        pool.release_unreferenced(allocated)
+        # --- dirty prefix blocks: copy-on-write from the round family ---
+        wp, wk, wv = [], [], []
+        for a in fam_members:
+            blocks = pend.dirty.get(a)
+            if blocks is None or blocks.size == 0:
+                continue
+            diff = None if rt.sessions[a].is_master \
+                else rt.sessions[a].mirror.diff
+            for b in [int(x) for x in blocks]:
+                kb, vb = self._family_block(master, diff, b, bt)
+                q = int(pool.alloc_pages(1)[0])
+                old = int(pool.page_tables[a][b])
+                pool.page_tables[a][b] = q
+                pool.incref([q])
+                pool.decref([old])
+                wp.append(q)
+                wk.append(kb)
+                wv.append(vb)
+        if wp:
+            pool.write_pages(np.asarray(wp, np.int32),
+                             jnp.stack(wk, axis=1), jnp.stack(wv, axis=1))
+        pool.span_len = h_new
+        pool.round_idx = pend.round_idx
+        pool.pending = None
+        return new_span_pages, len(wp)
+
+    @staticmethod
+    def _family_block(master: MasterCache, diff, b: int, bt: int):
+        """Block ``b`` of one member's round-family content: the mirror's
+        diff row when the block deviates from the Master, else the
+        Master's block — exactly what a full restore writes there."""
+        if diff is not None:
+            pos = np.flatnonzero(np.asarray(diff.block_idx) == b)
+            if pos.size:
+                return diff.k_vals[:, int(pos[0])], diff.v_vals[:, int(pos[0])]
+        return master.k[:, b * bt:(b + 1) * bt], \
+            master.v[:, b * bt:(b + 1) * bt]
 
     def _restore_dense(self, ctx: RoundContext, master: MasterCache,
                        pending: list, mirrors: list, span_len: int) -> dict:
@@ -318,19 +570,23 @@ class TokenDancePolicy(PICPolicy):
             s.hist_entry = None
             s.hist_pending = (hspan.end - hspan.start,
                               segment_hash(outputs[i]))
+        self._record_round_delta(ctx, plan, hspan)
         # evict masters no session references anymore (every member has
         # since been re-compressed into a newer family) — a recurring
         # group tuple can then never restore against a stale Master, the
         # dict does not grow one dense cache per historical grouping, and
         # the evicted family's PERSISTENT pool ledger entries go with it
         # (owner keys derive from the family, so regrouping cannot strand
-        # a stale td:master allocation under a dead group id)
+        # a stale td:master allocation under a dead group id — nor a
+        # stale hist:family cross-round pool, whose pages must never be
+        # read once their Master is gone)
         for key in [k for k in self.masters if k != ctx.group_key
                     and not any(rt.sessions[m].family == k
                                 for m in k if m in rt.sessions)]:
             del self.masters[key]
             rt.pool_free(f"td:master:{self._fam_owner(key)}")
             rt.pool_free(f"td:mirrors:{self._fam_owner(key)}")
+            self._drop_hist_pool(key)
         # ledger: one dense master + sparse mirrors + the N output
         # segments. Each allocation registers a Spillable so the tiered
         # manager can offload it under pressure: the Master's dense k/v,
@@ -352,6 +608,47 @@ class TokenDancePolicy(PICPolicy):
                 f"out:{a}", G, persistent=True,
                 spillable=entry_spillable(
                     rt.segment_index.get(segment_hash(outputs[i]))))
+
+    def _record_round_delta(self, ctx: RoundContext, plan, hspan) -> None:
+        """Arm the family's cross-round pool with this round's delta.
+
+        The pool currently holds content(r-1) over ``[0, h_prev)``; the
+        next restore must produce content(r) over ``[0, h_new)``. Those
+        differ exactly at (a) the appended span ``[h_prev, h_new)`` and
+        (b) the prefix blocks this round's recovery recomputed — the
+        reuse plan's per-agent selected positions, block-granular because
+        ``block_select`` aligns selection to KV blocks. Anything that
+        breaks the prefix-extension invariant (no collective plan, span
+        regression, pool already armed, member mismatch) invalidates the
+        pool instead: the next restore falls back to the full path."""
+        if not self.incremental:
+            return
+        pool = self.hist_pools.get(ctx.group_key)
+        if pool is None:
+            return
+        aids = ctx.agent_ids
+        bt = pool.block_tokens
+        h_prev, h_new = pool.span_len, hspan.end - hspan.start
+        ok = (plan is not None
+              and getattr(plan, "sel_idx_all", None) is not None
+              and pool.pending is None
+              and hspan.start == 0
+              and h_prev % bt == 0 and h_new % bt == 0
+              and h_new > h_prev
+              and list(plan.request_ids) == list(aids)
+              and set(aids) <= set(pool.page_tables))
+        if not ok:
+            self._drop_hist_pool(ctx.group_key)
+            return
+        sel_all = np.asarray(plan.sel_idx_all)
+        dirty = {}
+        for i, a in enumerate(aids):
+            sel = sel_all[i]
+            hb = np.unique(sel[sel < h_prev] // bt).astype(np.int32)
+            if hb.size:
+                dirty[a] = hb
+        pool.pending = PendingDelta(h_prev=h_prev, h_new=h_new,
+                                    dirty=dirty, round_idx=ctx.round_idx)
 
     @staticmethod
     def _fam_owner(group_key: tuple) -> str:

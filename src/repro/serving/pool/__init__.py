@@ -3,11 +3,12 @@ restore-ahead prefetch over :class:`~repro.serving.kvpool.PagedKVPool`."""
 from repro.serving.pool.eviction import (EvictionCandidate, EvictionPolicy,
                                          FamilyCostAware, LRUByRound,
                                          get_eviction_policy)
+from repro.serving.pool.histpool import HistoryPagePool, PendingDelta
 from repro.serving.pool.host import HostEntry, HostTier
 from repro.serving.pool.manager import PoolLedger, PoolManager, Spillable
 from repro.serving.pool.owners import (EVICTION_RANK, TRANSIENT_KINDS,
                                        OwnerInfo, family_owner, family_owners,
-                                       parse_owner)
+                                       hist_pool_owner, parse_owner)
 from repro.serving.pool.prefetch import PrefetchPlanner
 
 __all__ = [
@@ -16,10 +17,12 @@ __all__ = [
     "EvictionCandidate",
     "EvictionPolicy",
     "FamilyCostAware",
+    "HistoryPagePool",
     "HostEntry",
     "HostTier",
     "LRUByRound",
     "OwnerInfo",
+    "PendingDelta",
     "PoolLedger",
     "PoolManager",
     "PrefetchPlanner",
@@ -27,5 +30,6 @@ __all__ = [
     "family_owner",
     "family_owners",
     "get_eviction_policy",
+    "hist_pool_owner",
     "parse_owner",
 ]

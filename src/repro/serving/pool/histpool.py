@@ -1,0 +1,189 @@
+"""Cross-round persistent restore pool (incremental history restore).
+
+One :class:`HistoryPagePool` per Master family holds the family's
+restored history pages ACROSS round boundaries: on round r the policy
+reuses round r-1's pages for the history prefix and writes only the
+round delta (the newly appended span plus the few blocks the round's
+recovery recomputed), so restore work is O(round delta) instead of
+O(full history). The pool owns
+
+* the page arrays (``pool_k``/``pool_v``, [L, P, bt, KV, hd]) — the
+  same layout ``fused_restore_family_shared`` produces, so restored
+  entries and the collector's paged fast path consume them unchanged;
+* one page table per family member (int32 [nb]) — members alias the
+  Master's pages for clean blocks exactly as in the within-round
+  restore, and the tables extend in place as histories grow;
+* per-page reference counts + a free list, so copy-on-write block
+  updates recycle pages instead of growing the arrays.
+
+The pool registers with the tiered :class:`PoolManager` under the
+persistent owner ``hist:family:<fam>`` (kind ``histpool``): it is a
+first-class eviction candidate between rounds (rank 1 — losing it costs
+one full family restore, comparable to a dense history), spills to host
+and reloads bit-exact through its :class:`Spillable`, and consumers must
+``ensure_resident`` before touching the arrays.
+
+The pool is mechanism only — page allocation, refcounting, growth, and
+the scatter that writes page contents. The policy
+(``serving/policies/tokendance.py``) owns the lifecycle: when a pool is
+created (full restore), how the round delta is computed (``trim_family``
+with a start offset + the reuse plan's per-agent selection), and when a
+pool is invalidated (family evicted, span mismatch).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.pool.manager import Spillable
+from repro.serving.pool.owners import hist_pool_owner
+
+
+@dataclass
+class PendingDelta:
+    """The round delta recorded at store(r), applied at the next restore.
+
+    ``dirty`` maps each family member to the history blocks (< ``h_prev``)
+    its round-r recovery recomputed (the reuse plan's per-agent selected
+    positions, block-granular) — the only prefix blocks whose pool pages
+    are stale. The appended span ``[h_prev, h_new)`` is restored from the
+    round-r family via ``trim_family(..., start=h_prev)``.
+    """
+
+    h_prev: int                       # pool span before the delta
+    h_new: int                        # history span after round r
+    dirty: Dict[str, np.ndarray]      # member -> int32 [n] block ids
+    round_idx: int                    # the round whose store recorded it
+
+
+class HistoryPagePool:
+    """Persistent page pool for one Master family's restored histories."""
+
+    def __init__(self, group_key: tuple, pool_k, pool_v,
+                 page_tables: Dict[str, np.ndarray], span_len: int,
+                 block_tokens: int, round_idx: int) -> None:
+        self.group_key = tuple(group_key)
+        self.pool_k = pool_k
+        self.pool_v = pool_v
+        self.page_tables = {a: np.asarray(t, np.int32).copy()
+                            for a, t in page_tables.items()}
+        self.span_len = int(span_len)
+        self.block_tokens = int(block_tokens)
+        self.round_idx = int(round_idx)
+        self.pending: Optional[PendingDelta] = None
+        #: pages added by capacity growth since creation (ledger honesty)
+        self.grown_pages = 0
+        cap = int(pool_k.shape[1])
+        ref = np.zeros(cap, np.int64)
+        for t in self.page_tables.values():
+            np.add.at(ref, t, 1)
+        self.refcount = ref
+        # pages the creating restore wrote but nothing references (the
+        # family pack's padded diff rows) are immediately reusable
+        self.free_list = [p for p in range(cap) if ref[p] == 0]
+
+    # ------------------------------------------------------------ props
+    @property
+    def owner(self) -> str:
+        return hist_pool_owner(self.group_key)
+
+    @property
+    def capacity(self) -> int:
+        return int(self.pool_k.shape[1])
+
+    @property
+    def members(self) -> tuple:
+        return tuple(self.page_tables)
+
+    # ------------------------------------------------------ page allocs
+    def alloc_pages(self, n: int) -> np.ndarray:
+        """Claim ``n`` pages (refcount 0 until a table references them),
+        growing the arrays geometrically when the free list runs dry."""
+        if n > len(self.free_list):
+            need = n - len(self.free_list)
+            self._grow(max(need, self.capacity // 2))
+        pages = [self.free_list.pop() for _ in range(n)]
+        return np.asarray(pages, np.int32)
+
+    def _grow(self, add: int) -> None:
+        L, _, bt, KV, hd = self.pool_k.shape
+        cap = self.capacity
+        pad_k = jnp.zeros((L, add, bt, KV, hd), self.pool_k.dtype)
+        pad_v = jnp.zeros((L, add, bt, KV, hd), self.pool_v.dtype)
+        self.pool_k = jnp.concatenate([jnp.asarray(self.pool_k), pad_k],
+                                      axis=1)
+        self.pool_v = jnp.concatenate([jnp.asarray(self.pool_v), pad_v],
+                                      axis=1)
+        self.refcount = np.concatenate(
+            [self.refcount, np.zeros(add, np.int64)])
+        self.free_list.extend(range(cap, cap + add))
+        self.grown_pages += add
+
+    def incref(self, pages) -> None:
+        np.add.at(self.refcount, np.asarray(pages, np.int64), 1)
+
+    def decref(self, pages) -> None:
+        """Drop references; pages reaching zero return to the free list."""
+        for p in np.asarray(pages).ravel():
+            p = int(p)
+            self.refcount[p] -= 1
+            assert self.refcount[p] >= 0, (p, "refcount underflow")
+            if self.refcount[p] == 0:
+                self.free_list.append(p)
+
+    def release_unreferenced(self, pages) -> int:
+        """Return any of ``pages`` nothing ended up referencing (padded
+        diff rows of a family launch) to the free list."""
+        freed = 0
+        for p in np.asarray(pages).ravel():
+            p = int(p)
+            if self.refcount[p] == 0 and p not in self.free_list:
+                self.free_list.append(p)
+                freed += 1
+        return freed
+
+    # ---------------------------------------------------------- writes
+    def write_pages(self, pages, kb, vb) -> None:
+        """Scatter block contents ([L, n, bt, KV, hd]) into ``pages``.
+
+        Functional update: XLA materializes a fresh pool buffer per call
+        on CPU (O(capacity) data movement); counted restore work is the
+        scattered pages, which is what the benchmarks gate. On TPU the
+        same scatter is in-place with buffer donation — recorded as an
+        open remainder in ROADMAP.
+        """
+        idx = jnp.asarray(np.asarray(pages, np.int32))
+        self.pool_k = jnp.asarray(self.pool_k).at[:, idx].set(kb)
+        self.pool_v = jnp.asarray(self.pool_v).at[:, idx].set(vb)
+
+    # ----------------------------------------------------------- tiers
+    def spillable(self) -> Spillable:
+        """Move the page arrays host<->device in place; tables, refcounts
+        and the free list are host state and stay put."""
+        def get():
+            return (self.pool_k, self.pool_v)
+
+        def put(arrs):
+            self.pool_k, self.pool_v = arrs
+        return Spillable(get, put)
+
+    # ------------------------------------------------------ invariants
+    def check(self) -> None:
+        """Internal invariants (exercised by the fuzz suite): tables only
+        reference live pages, refcounts match table references, and the
+        free list is exactly the unreferenced pages."""
+        cap = self.capacity
+        ref = np.zeros(cap, np.int64)
+        for t in self.page_tables.values():
+            assert t.min(initial=0) >= 0 and t.max(initial=-1) < cap, \
+                (self.owner, "page table out of range")
+            np.add.at(ref, t, 1)
+        assert np.array_equal(ref, self.refcount), \
+            (self.owner, "refcount drift")
+        free = sorted(self.free_list)
+        assert free == sorted(set(free)), (self.owner, "free list dup")
+        assert free == [p for p in range(cap) if ref[p] == 0], \
+            (self.owner, "free list != unreferenced pages")

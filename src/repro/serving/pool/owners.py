@@ -10,6 +10,9 @@ cost instead of treating the pool as a flat byte bucket:
                          (small, and regenerated at every store anyway)
   ``out:<aid>``          one agent's output segment (G tokens)
   ``hist:<aid>``         one agent's dense history entry (pic baseline)
+  ``hist:family:<fam>``  the family's PERSISTENT cross-round restore pool
+                         (incremental restore): survives rounds, spillable,
+                         losing it costs one full family restore
   ``sess:<aid>``         one agent's dense prefix cache (prefix baseline)
   ``td:master:<fam>``    the family's ONE dense cache: most expensive —
                          losing it strands every mirror of the family
@@ -32,6 +35,7 @@ EVICTION_RANK = {
     "mirrors": 0,
     "out": 1,
     "hist": 1,
+    "histpool": 1,
     "sess": 1,
     "master": 2,
 }
@@ -43,6 +47,7 @@ _PREFIXES = (
     ("td:master:", "master"),
     ("td:mirrors:", "mirrors"),
     ("restore:family:", "restore"),
+    ("hist:family:", "histpool"),   # must precede the "hist:" prefix
     ("hist:", "hist"),
     ("out:", "out"),
     ("sess:", "sess"),
@@ -85,3 +90,9 @@ def family_owners(group_key: Sequence[str]) -> tuple:
     """The two persistent pool owners a Master family allocates."""
     fam = family_owner(group_key)
     return (f"td:master:{fam}", f"td:mirrors:{fam}")
+
+
+def hist_pool_owner(group_key: Sequence[str]) -> str:
+    """The persistent cross-round restore-pool owner of a Master family
+    (incremental restore; see ``serving/pool/histpool.py``)."""
+    return f"hist:family:{family_owner(group_key)}"

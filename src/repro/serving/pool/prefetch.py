@@ -16,7 +16,7 @@ from __future__ import annotations
 
 from typing import Dict, Iterable, List
 
-from repro.serving.pool.owners import family_owners
+from repro.serving.pool.owners import family_owners, hist_pool_owner
 
 
 class PrefetchPlanner:
@@ -39,6 +39,10 @@ class PrefetchPlanner:
             if fam is not None and fam not in seen:
                 seen.add(fam)
                 owners.extend(family_owners(fam))
+                # the family's cross-round restore pool (incremental
+                # restore) — reloading it ahead of plan() turns the
+                # prefix-page reuse's residency check into a hit
+                owners.append(hist_pool_owner(fam))
             out = f"out:{a}"
             if out not in seen:
                 seen.add(out)

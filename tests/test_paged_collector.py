@@ -350,14 +350,29 @@ def test_engine_accounts_shared_pages_once(engines):
     the history span is fully private, the engine's common case — the
     Master's nb pages are still written and accounted once, not M+1
     times), and end-to-end bytes strictly below the dense oracle branch,
-    which pays the same restore launch plus M+1 dense history copies."""
+    which pays the same restore launch plus M+1 dense history copies.
+
+    Round 1 is the pool-creating full restore; round 2 onward the
+    default engine restores incrementally, so the counted write work
+    (``pool_pages``) covers only the round delta while the prefix rides
+    on ``pages_reused``."""
     _, stats_p, _, stats_d, _ = engines
-    ri = stats_p[-1].reuse["restore"]
-    rd = stats_d[-1].reuse["restore"]
+    ri = stats_p[1].reuse["restore"]           # full restore creates the pool
+    rd = stats_d[1].reuse["restore"]
+    assert ri["incremental"] is False
     assert ri["pool_pages"] > 0
     assert ri["pool_pages"] <= ri["full_write_pages"]
     assert ri["pool_pages"] >= ri["nb"]   # master share counted once
     assert ri["bytes_materialized"] < rd["bytes_materialized"]
+    inc = stats_p[-1].reuse["restore"]         # round 2: incremental delta
+    assert inc["incremental"] is True
+    assert inc["pool_pages"] > 0
+    assert inc["pool_pages"] < inc["full_write_pages"]
+    # every history block is accounted exactly once: either written this
+    # round or carried over from the previous round's pool
+    assert inc["pool_pages"] + inc["pages_reused"] >= inc["nb"]
+    assert inc["bytes_materialized"] < stats_d[-1].reuse["restore"][
+        "bytes_materialized"]
 
 
 def test_engine_paged_attention_on_off_bitexact(setup, engines):

@@ -30,6 +30,7 @@ from repro.serving import (
     ServingEngine,
     Spillable,
 )
+from repro.serving.pool import parse_owner
 
 N_AGENTS = 3
 N_ROUNDS = 2
@@ -190,18 +191,38 @@ def test_persistent_bytes_survive_spill(setup):
             + pool_info["persistent_host_bytes"]
             == stats[-1].persistent_bytes)
     total = eng._persistent_bytes()
-    dev0, host0 = eng._persistent_split()
+    dev0, host0, cache0 = eng._persistent_split()
     assert total == dev0 + host0 and dev0 > 0
-    # spill one persistent, spill-registered owner by hand
+    # spill one persistent, spill-registered STORE owner by hand (the
+    # histpool restore cache is accounted separately — see below)
     victim = next(o for o in eng.manager._spillables
                   if o in eng.pool._allocs
-                  and eng.pool._allocs[o].persistent)
+                  and eng.pool._allocs[o].persistent
+                  and parse_owner(o).kind != "histpool")
     n_pages = eng.pool._allocs[victim].n_pages
     assert eng.manager.spill(victim)
-    dev1, host1 = eng._persistent_split()
+    dev1, host1, cache1 = eng._persistent_split()
     assert eng._persistent_bytes() == total          # conserved across tiers
     assert host1 == host0 + n_pages * eng.pool.page_bytes()
     assert dev1 == dev0 - n_pages * eng.pool.page_bytes()
+    assert cache1 == cache0                          # cache class untouched
+
+
+def test_restore_cache_accounted_separately(setup):
+    """The cross-round restore pool is a reconstructible accelerator
+    cache: its bytes are reported (reuse['pool']['restore_cache_bytes'])
+    but excluded from persistent_bytes — and spilling it moves bytes
+    WITHIN the cache class, never into the persistent split."""
+    cfg, params = setup
+    eng, stats = _serve(params, cfg, "tokendance", paged=True)
+    pool_info = stats[-1].reuse["pool"]
+    assert pool_info["restore_cache_bytes"] > 0      # incremental default
+    dev0, host0, cache0 = eng._persistent_split()
+    hp_owner = next(o for o in eng.pool._allocs
+                    if parse_owner(o).kind == "histpool")
+    assert eng.manager.spill(hp_owner)
+    dev1, host1, cache1 = eng._persistent_split()
+    assert (dev1, host1, cache1) == (dev0, host0, cache0)
 
 
 def test_replay_fallback_keyed_by_agent_id(setup):

@@ -1,16 +1,23 @@
 """Hypothesis property tests on the system's invariants.
 
-Skipped wholesale when the hypothesis package is unavailable (this
-container does not ship it); tests/test_restore_parity.py carries
+Skipped wholesale when the hypothesis package is unavailable (some dev
+containers do not ship it); tests/test_restore_parity.py carries
 seed-parametrized versions of the storage round-trip invariants so they
-stay exercised either way.
+stay exercised either way. On CI the skip is a HARD failure — the
+workflow installs hypothesis, so an import error there means the fuzz
+coverage silently vanished (REQUIRE_HYPOTHESIS=1 in ci.yml).
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
+if os.environ.get("REQUIRE_HYPOTHESIS"):
+    import hypothesis  # noqa: F401  — hard failure: CI must fuzz
+else:
+    pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

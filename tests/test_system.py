@@ -64,7 +64,12 @@ def test_pic_approximation_is_bounded(all_modes):
 
 
 def test_tokendance_compresses_storage(all_modes):
-    """Persistent bytes: tokendance << prefix (the paper's memory claim)."""
+    """Persistent bytes: tokendance << prefix (the paper's memory claim).
+    persistent_bytes is the must-keep store (masters + mirror diffs +
+    outputs); the cross-round incremental-restore pool is a droppable
+    accelerator cache reported separately (restore_cache_bytes) — it
+    trades resident memory for O(round delta) restore work and is not
+    part of the compression claim."""
     _, pre = all_modes["prefix"]
     _, td = all_modes["tokendance"]
     last_pre = pre[-1].persistent_bytes
@@ -73,6 +78,8 @@ def test_tokendance_compresses_storage(all_modes):
     comp = td[-1].reuse["compression"]
     assert comp["per_mirror_ratio"] > 1.0
     assert comp["avg_changed_blocks"] < comp["total_blocks"]
+    # the restore cache is resident (incremental default) and visible
+    assert td[-1].reuse["pool"]["restore_cache_bytes"] > 0
 
 
 def test_collective_is_faster_than_serial(all_modes):
