@@ -287,8 +287,86 @@ def tiered_pool(rep: Reporter, quick: bool = False) -> None:
     rep.record("tiered_pool", payload)
 
 
+# ---------------------------------------------------------------------------
+# continuous_serving — makespan in counted model-step slots (ISSUE 9)
+# ---------------------------------------------------------------------------
+# The continuous engine on a staggered 3-committee trace vs the
+# synchronized round-barrier baseline, both in counted model-step slots
+# (the StepScheduler's virtual clock — deterministic on any runner, no
+# wall-clock anywhere). Per-agent output parity against the synchronized
+# oracle is asserted BEFORE the artifact is written: the JSON never
+# records a run whose values drifted. The artifact
+# (experiments/bench/continuous_serving.json) is CI-gated: parity true
+# and continuous strictly below synchronized. Schema: docs/benchmarks.md.
+
+def continuous_serving(rep: Reporter, quick: bool = False) -> None:
+    from repro.core.rounds import SubsetGather
+    from repro.serving import ContinuousEngine
+
+    cfg, params = model("qwen2.5-7b")
+    n_agents, group_size = 6, 2
+    n_rounds = 2 if quick else 3
+    stagger = [0, 8, 16]
+    aids = [f"agent{i}" for i in range(n_agents)]
+    topo = SubsetGather.grouped(aids, group_size)
+
+    def trace():
+        return generate_trace("generative_agents", n_agents, n_rounds,
+                              cfg.vocab_size, seed=11, jitter_hist=False)
+
+    sync_eng = ServingEngine(params, cfg, get_policy("tokendance"),
+                             topology=topo, gen_len=32,
+                             recompute_ratio=0.1)
+    sync_stats = sync_eng.serve(trace())
+    cont = ContinuousEngine(params, cfg, "tokendance", topology=topo,
+                            gen_len=32, recompute_ratio=0.1)
+    res = cont.serve(trace(), stagger=stagger)
+
+    # --- parity gate: per-agent outputs bit-exact vs the oracle --------
+    per_agent = {a: [] for a in aids}
+    for s in sync_stats:
+        admitted = s.admission["admitted"] if s.admission else aids
+        for i, a in enumerate(admitted):
+            per_agent[a].append(s.outputs[i])
+    parity = all(
+        len(res.outputs[a]) == len(per_agent[a])
+        and all(np.array_equal(x, y)
+                for x, y in zip(res.outputs[a], per_agent[a]))
+        for a in aids)
+    assert parity, "continuous outputs drifted from the synchronized oracle"
+    assert res.makespan_steps < res.sync_makespan_steps, (
+        res.makespan_steps, res.sync_makespan_steps)
+
+    payload = {
+        "config": {"model": "qwen2.5-7b", "n_agents": n_agents,
+                   "committees": n_agents // group_size,
+                   "group_size": group_size, "n_rounds": n_rounds,
+                   "gen_tokens": 32, "stagger_steps": stagger,
+                   "slots_per_step": cont.scheduler.slots},
+        "parity_vs_synchronized": bool(parity),
+        "makespan": {
+            "continuous_steps": int(res.makespan_steps),
+            "synchronized_steps": int(res.sync_makespan_steps),
+            "speedup": round(res.sync_makespan_steps
+                             / max(1, res.makespan_steps), 3),
+        },
+        "overlap_steps": int(res.overlap_steps),
+        "restore_overlap_events": int(res.restore_overlap_events),
+        "timeline_events": len(res.timeline),
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "continuous_serving.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    rep.add("continuous_serving/makespan_steps", res.makespan_steps,
+            f"sync={res.sync_makespan_steps} overlap={res.overlap_steps} "
+            f"speedup={payload['makespan']['speedup']}x (counted steps)")
+    rep.record("continuous_serving", payload)
+
+
 if __name__ == "__main__":
-    # fast counted-pages entry for CI: no model execution, just the
-    # tiered-pool capacity sweep + artifact
+    # CI entry: the counted-pages tiered-pool sweep (no model execution)
+    # plus the counted-steps continuous-serving artifact (one small
+    # smoke-model serve per engine, parity-gated)
     _rep = Reporter()
     tiered_pool(_rep)
+    continuous_serving(_rep)

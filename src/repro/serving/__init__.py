@@ -1,5 +1,14 @@
 from repro.serving.engine import MODES, MultiAgentEngine, ServingEngine
 from repro.serving.kvpool import Allocation, PagedKVPool, PoolExhausted
+from repro.serving.loop import (
+    ContinuousEngine,
+    ContinuousResult,
+    Phase,
+    PhaseCost,
+    StepEvent,
+    StepScheduler,
+    WorkItem,
+)
 from repro.serving.planner import RoundPlan, RoundPlanner
 from repro.serving.pool import (
     EvictionPolicy,
@@ -80,4 +89,12 @@ __all__ = [
     "DenseRoundKV",
     "PagedRoundKV",
     "round_kv",
+    # continuous serving loop (ISSUE 9)
+    "ContinuousEngine",
+    "ContinuousResult",
+    "Phase",
+    "PhaseCost",
+    "StepEvent",
+    "StepScheduler",
+    "WorkItem",
 ]

@@ -26,7 +26,8 @@ from __future__ import annotations
 
 import time
 import warnings
-from typing import Dict, List, Optional, Tuple, Union
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +57,38 @@ from repro.serving.policies import (
 from repro.serving.state import RoundStats, Session
 
 MODES = ("recompute", "prefix", "pic", "tokendance")
+
+
+@dataclass
+class DecodeState:
+    """An in-flight greedy decode for one equal-length batch, advanced
+    one model step at a time.
+
+    The synchronized engine runs begin → advance×(G-1) → finish in a
+    tight loop (:meth:`ServingEngine._decode_dense` /
+    :meth:`ServingEngine._decode_paged`); the continuous engine
+    (``serving/loop``) holds several of these open at once and advances
+    each on its scheduler tick. Both paths share the jit cache keyed by
+    (kind, N, S+G), so an interleaved decode compiles and computes
+    exactly what the synchronized loop does — this is the mechanism
+    behind the bit-exact oracle relationship.
+    """
+
+    step: Callable                 # jitted (tok, cache) -> (tok, cache)
+    tok: jax.Array                 # last greedy token, [N]
+    cache: dict                    # dense or paged decode cache
+    outs: list = field(default_factory=list)   # per-step tokens, [N] each
+    gaids: List[str] = field(default_factory=list)
+    S: int = 0                     # prompt length
+    G: int = 0                     # gen_len
+    bt: int = 0                    # block_tokens (paged page tile)
+    paged: bool = False
+    t: int = 0                     # decode steps taken (of G-1)
+    t0: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.t >= self.G - 1
 
 
 class ServingEngine:
@@ -173,47 +206,118 @@ class ServingEngine:
                  [l for _, l, _ in p]) for p in parts.values()]
 
     # ------------------------------------------------------------------
-    def _decode_dense(self, first_logits, prefill_cache: dict, N: int, S: int):
-        """Greedy decode gen_len tokens for the group over a dense padded
-        [L, N, S+G] cache (attention KV, SSM state, or both) — the
-        fallback for SSM/hybrid state and the bit-exact oracle the paged
-        loop is pinned against."""
+    def _decode_begin(self, first_logits, prefill_cache: dict, N: int,
+                      S: int, gaids: List[str], use_paged: bool
+                      ) -> DecodeState:
+        """Build the decode cache, jit the step function (shared cache
+        keyed by (kind, N, S+G)), take the first greedy token from the
+        recovery logits, and warm the step — everything up to (but not
+        including) the first decode step. The returned
+        :class:`DecodeState` is then advanced by :meth:`_decode_advance`
+        one model step at a time and closed by :meth:`_decode_finish`."""
         cfg, G = self.cfg, self.gen_len
         total = S + G
-        cache = {"length": jnp.full((N,), S, jnp.int32)}
-        if "k" in prefill_cache:
+        bt = self.block_select
+        if use_paged:
+            # the recovered prefill KV becomes each agent's sealed pages;
+            # gen pages start zeroed (the dense loop's jnp.pad by G,
+            # page-shaped)
+            nb_s, nb_g = S // bt, G // bt
+            nbt = nb_s + nb_g
             k, v = prefill_cache["k"], prefill_cache["v"]
-            cache.update({
-                "k": jnp.pad(k, ((0, 0), (0, 0), (0, G), (0, 0), (0, 0))),
-                "v": jnp.pad(v, ((0, 0), (0, 0), (0, G), (0, 0), (0, 0))),
+            L, _, _, KV, hd = k.shape
+
+            def to_pool(x):
+                x = x.reshape(L, N, nb_s, bt, KV, hd)
+                x = jnp.pad(x, ((0, 0), (0, 0), (0, nb_g),
+                                (0, 0), (0, 0), (0, 0)))
+                return x.reshape(L, N * nbt, bt, KV, hd)
+
+            cache = {
+                "pk": to_pool(k),
+                "pv": to_pool(v),
+                "page_idx": jnp.arange(N * nbt,
+                                       dtype=jnp.int32).reshape(N, nbt),
                 "kv_pos": jnp.pad(jnp.broadcast_to(
                     jnp.arange(S, dtype=jnp.int32)[None], (N, S)),
                     ((0, 0), (0, G))),
                 "kv_valid": jnp.pad(jnp.ones((N, S), bool),
                                     ((0, 0), (0, G))),
-            })
-        for key_ in ("ssm", "conv"):
-            if key_ in prefill_cache:
-                cache[key_] = prefill_cache[key_]
-        key = ("decode", N, total)
-        if key not in self.rt.jit:
-            def f(tok, cache):
-                logits, cache = decode_step(self.params, cfg, tok, cache)
-                return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
-            self.rt.jit[key] = jax.jit(f)
+                "length": jnp.full((N,), S, jnp.int32),
+            }
+            key = ("decode_paged", N, total)
+            if key not in self.rt.jit:
+                def f(tok, cache):
+                    logits, cache = decode_step_paged(
+                        self.params, cfg, tok, cache)
+                    return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                            cache)
+                self.rt.jit[key] = jax.jit(f)
+        else:
+            cache = {"length": jnp.full((N,), S, jnp.int32)}
+            if "k" in prefill_cache:
+                k, v = prefill_cache["k"], prefill_cache["v"]
+                cache.update({
+                    "k": jnp.pad(k, ((0, 0), (0, 0), (0, G),
+                                     (0, 0), (0, 0))),
+                    "v": jnp.pad(v, ((0, 0), (0, 0), (0, G),
+                                     (0, 0), (0, 0))),
+                    "kv_pos": jnp.pad(jnp.broadcast_to(
+                        jnp.arange(S, dtype=jnp.int32)[None], (N, S)),
+                        ((0, 0), (0, G))),
+                    "kv_valid": jnp.pad(jnp.ones((N, S), bool),
+                                        ((0, 0), (0, G))),
+                })
+            for key_ in ("ssm", "conv"):
+                if key_ in prefill_cache:
+                    cache[key_] = prefill_cache[key_]
+            key = ("decode", N, total)
+            if key not in self.rt.jit:
+                def f(tok, cache):
+                    logits, cache = decode_step(self.params, cfg, tok, cache)
+                    return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                            cache)
+                self.rt.jit[key] = jax.jit(f)
         step = self.rt.jit[key]
         tok = jnp.argmax(first_logits, axis=-1).astype(jnp.int32)
         if key not in self.rt.warm:
             jax.block_until_ready(step(tok, cache))
             self.rt.warm.add(key)
-        outs = [tok]
-        t0 = time.perf_counter()
-        for _ in range(G - 1):
-            tok, cache = step(tok, cache)
-            outs.append(tok)
-        jax.block_until_ready(tok)
-        dt = time.perf_counter() - t0
-        return np.stack([np.asarray(t) for t in outs], axis=1), cache, dt
+        return DecodeState(step=step, tok=tok, cache=cache, outs=[tok],
+                           gaids=list(gaids), S=S, G=G, bt=bt,
+                           paged=use_paged, t0=time.perf_counter())
+
+    def _decode_advance(self, st: DecodeState) -> None:
+        """One greedy decode step. On the paged path, the write at
+        position S+t opens a fresh gen page each time generation crosses
+        a block boundary: claim it in the ledger before the step fills
+        its first slot (the previous page is sealed from here on)."""
+        if st.paged and (st.S + st.t) % st.bt == 0:
+            for a in st.gaids:
+                self.manager.append_page(f"round:{a}")
+        st.tok, st.cache = st.step(st.tok, st.cache)
+        st.outs.append(st.tok)
+        st.t += 1
+
+    def _decode_finish(self, st: DecodeState):
+        """Materialize the decode: outputs [N, G] on host, the final
+        cache, and the wall-clock spent since :meth:`_decode_begin`
+        (reported, never gated — CI gates counted work only)."""
+        jax.block_until_ready(st.tok)
+        dt = time.perf_counter() - st.t0
+        return (np.stack([np.asarray(t) for t in st.outs], axis=1),
+                st.cache, dt)
+
+    def _decode_dense(self, first_logits, prefill_cache: dict, N: int, S: int):
+        """Greedy decode gen_len tokens for the group over a dense padded
+        [L, N, S+G] cache (attention KV, SSM state, or both) — the
+        fallback for SSM/hybrid state and the bit-exact oracle the paged
+        loop is pinned against."""
+        st = self._decode_begin(first_logits, prefill_cache, N, S,
+                                gaids=[], use_paged=False)
+        while not st.done:
+            self._decode_advance(st)
+        return self._decode_finish(st)
 
     # ------------------------------------------------------------------
     def _paged_decode_ok(self, prefill_cache: dict, S: int) -> bool:
@@ -236,62 +340,14 @@ class ServingEngine:
         so the dense [L, N, S+G] cache of :meth:`_decode_dense` is never
         built. The in-step gather of the SAME pages reconstructs the
         dense KV stream exactly, making outputs bit-identical to the
-        dense loop (pinned in tests). Each time generation crosses a
-        block boundary the ledger claims a fresh page per agent
-        (:meth:`PoolManager.append_page`), landing on the same
-        end-of-round page totals as the dense loop's up-front S+G
+        dense loop (pinned in tests), and ledger page claims land on the
+        same end-of-round totals as the dense loop's up-front S+G
         allocation."""
-        cfg, G, bt = self.cfg, self.gen_len, self.block_select
-        total = S + G
-        nb_s, nb_g = S // bt, G // bt
-        nbt = nb_s + nb_g
-        k, v = prefill_cache["k"], prefill_cache["v"]
-        L, _, _, KV, hd = k.shape
-
-        def to_pool(x):
-            # [L, N, S, KV, hd] -> [L, N*nbt, bt, KV, hd]: the prompt's
-            # blocks become sealed pages; gen pages start zeroed (the
-            # dense loop's jnp.pad by G, page-shaped)
-            x = x.reshape(L, N, nb_s, bt, KV, hd)
-            x = jnp.pad(x, ((0, 0), (0, 0), (0, nb_g),
-                            (0, 0), (0, 0), (0, 0)))
-            return x.reshape(L, N * nbt, bt, KV, hd)
-
-        cache = {
-            "pk": to_pool(k),
-            "pv": to_pool(v),
-            "page_idx": jnp.arange(N * nbt, dtype=jnp.int32).reshape(N, nbt),
-            "kv_pos": jnp.pad(jnp.broadcast_to(
-                jnp.arange(S, dtype=jnp.int32)[None], (N, S)),
-                ((0, 0), (0, G))),
-            "kv_valid": jnp.pad(jnp.ones((N, S), bool), ((0, 0), (0, G))),
-            "length": jnp.full((N,), S, jnp.int32),
-        }
-        key = ("decode_paged", N, total)
-        if key not in self.rt.jit:
-            def f(tok, cache):
-                logits, cache = decode_step_paged(self.params, cfg, tok, cache)
-                return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
-            self.rt.jit[key] = jax.jit(f)
-        step = self.rt.jit[key]
-        tok = jnp.argmax(first_logits, axis=-1).astype(jnp.int32)
-        if key not in self.rt.warm:
-            jax.block_until_ready(step(tok, cache))
-            self.rt.warm.add(key)
-        outs = [tok]
-        t0 = time.perf_counter()
-        for t in range(G - 1):
-            if (S + t) % bt == 0:
-                # the write at position S+t opens a fresh gen page:
-                # claim it in the ledger before the step fills its
-                # first slot (the previous page is sealed from here on)
-                for a in gaids:
-                    self.manager.append_page(f"round:{a}")
-            tok, cache = step(tok, cache)
-            outs.append(tok)
-        jax.block_until_ready(tok)
-        dt = time.perf_counter() - t0
-        return np.stack([np.asarray(t) for t in outs], axis=1), cache, dt
+        st = self._decode_begin(first_logits, prefill_cache, N, S,
+                                gaids=gaids, use_paged=True)
+        while not st.done:
+            self._decode_advance(st)
+        return self._decode_finish(st)
 
     # ------------------------------------------------------------------
     def run_round(self, rnd: Round, plan: Optional[RoundPlan] = None,
@@ -314,6 +370,7 @@ class ServingEngine:
                     else self.topology)
         self.manager.begin_round(self.round_idx)
         ledger_before = self.manager.ledger.snapshot()
+        scoped_before = self.manager.ledger.scoped_snapshot()
         # restore-ahead: round r+1's admission plan names the owners its
         # restores will read; reload them while round r decodes. Agents
         # admitted THIS round are excluded — their family state is
@@ -363,6 +420,12 @@ class ServingEngine:
         dev_bytes, host_bytes, cache_bytes = self._persistent_split()
         stats.persistent_bytes = dev_bytes + host_bytes
         pool_delta = self.manager.ledger.delta(ledger_before)
+        # per-committee breakdown of the same counters (scope = gather
+        # group id; traffic outside any group books to "engine") — so
+        # multi-committee rounds don't blend into one aggregate
+        by_committee = self.manager.ledger.scoped_delta(scoped_before)
+        if by_committee:
+            pool_delta["by_committee"] = by_committee
         pool_delta["persistent_device_bytes"] = dev_bytes
         pool_delta["persistent_host_bytes"] = host_bytes
         pool_delta["restore_cache_bytes"] = cache_bytes
@@ -374,7 +437,15 @@ class ServingEngine:
                    tokens_np: np.ndarray, layouts: List[PromptLayout],
                    stats: RoundStats):
         """plan -> recover -> decode -> store for one equal-length batch
-        of a gather group."""
+        of a gather group, with ledger traffic attributed to the group's
+        committee scope (``g<i>``, partition suffix stripped)."""
+        with self.manager.scoped(gid.split(".")[0]):
+            return self._run_group_scoped(gid, gaids, tokens_np, layouts,
+                                          stats)
+
+    def _run_group_scoped(self, gid: str, gaids: List[str],
+                          tokens_np: np.ndarray,
+                          layouts: List[PromptLayout], stats: RoundStats):
         tokens = jnp.asarray(tokens_np)
         N, S = tokens.shape
         if stats.prompt_len == 0:

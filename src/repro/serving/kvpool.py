@@ -8,7 +8,7 @@ split — the quantities behind the paper's Figs. 2 and 10).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -159,10 +159,16 @@ class PagedKVPool:
     def free_pages(self) -> int:
         return len(self._free)
 
-    def free_transient(self) -> None:
-        """Reclaim every non-persistent allocation — the engine calls this
-        at round boundaries so only agent state carries over."""
-        for owner in [o for o, a in self._allocs.items() if not a.persistent]:
+    def free_transient(self, prefixes: Optional[Sequence[str]] = None) -> None:
+        """Reclaim non-persistent allocations — the engine calls this at
+        round boundaries so only agent state carries over. ``prefixes``
+        restricts the sweep to owners matching any of the given key
+        prefixes: the continuous engine frees ONE committee's transients
+        (``restore:family:g<c>``, ``round:<aid>``) while another
+        committee's round working set is still in flight."""
+        for owner in [o for o, a in self._allocs.items() if not a.persistent
+                      and (prefixes is None
+                           or any(o.startswith(p) for p in prefixes))]:
             self.free(owner)
 
     def used_pages(self) -> int:

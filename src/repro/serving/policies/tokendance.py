@@ -24,7 +24,8 @@ from repro.serving.policies.base import (RecoveryResult, RoundContext,
                                          entry_spillable, register_policy)
 from repro.serving.policies.pic import PICPolicy
 from repro.serving.pool import Spillable
-from repro.serving.pool.histpool import HistoryPagePool, PendingDelta
+from repro.serving.pool.histpool import (COWDedup, HistoryPagePool,
+                                         PendingDelta)
 from repro.serving.round_kv import round_kv
 
 
@@ -334,11 +335,11 @@ class TokenDancePolicy(PICPolicy):
         rt.ensure_resident(pool.owner)
         bt = pool.block_tokens
         nb_prev = pool.span_len // bt
-        new_span_pages = cow_pages = 0
+        new_span_pages = cow_pages = cow_dedup_hits = 0
         grown0 = pool.grown_pages
         if pend is not None:
-            new_span_pages, cow_pages = self._apply_pending(pool, fam,
-                                                            master)
+            new_span_pages, cow_pages, cow_dedup_hits = \
+                self._apply_pending(pool, fam, master)
             # capacity may have grown (or stayed put with recycled COW
             # pages) — re-account the persistent owner at its real size
             rt.pool_free(pool.owner)
@@ -381,7 +382,8 @@ class TokenDancePolicy(PICPolicy):
             "pool_pages": pages_written,     # counted restore work
             "pages_reused": len(reused),     # prefix pages NOT re-restored
             "new_span_pages": new_span_pages,
-            "cow_pages": cow_pages,
+            "cow_pages": cow_pages,          # distinct pages written
+            "cow_dedup_hits": cow_dedup_hits,  # COW writes shared, not stored
             "grown_pages": pool.grown_pages - grown0,
             "full_write_pages": (len(mirrors) + 1) * nbh,  # un-shared cost
             "page_bytes": page_b,
@@ -445,7 +447,12 @@ class TokenDancePolicy(PICPolicy):
         # immediately reusable
         pool.release_unreferenced(allocated)
         # --- dirty prefix blocks: copy-on-write from the round family ---
+        # cross-member dedup: when two members dirty the same block and
+        # the rewritten contents are bit-identical (e.g. neither mirror's
+        # diff covers it, so both rewrite the Master's bytes), they share
+        # one freshly-written page via refcount instead of storing twice
         wp, wk, wv = [], [], []
+        dedup = COWDedup()
         for a in fam_members:
             blocks = pend.dirty.get(a)
             if blocks is None or blocks.size == 0:
@@ -454,21 +461,24 @@ class TokenDancePolicy(PICPolicy):
                 else rt.sessions[a].mirror.diff
             for b in [int(x) for x in blocks]:
                 kb, vb = self._family_block(master, diff, b, bt)
-                q = int(pool.alloc_pages(1)[0])
+                q = dedup.match(b, kb, vb)
+                if q is None:
+                    q = int(pool.alloc_pages(1)[0])
+                    dedup.insert(b, kb, vb, q)
+                    wp.append(q)
+                    wk.append(kb)
+                    wv.append(vb)
                 old = int(pool.page_tables[a][b])
                 pool.page_tables[a][b] = q
                 pool.incref([q])
                 pool.decref([old])
-                wp.append(q)
-                wk.append(kb)
-                wv.append(vb)
         if wp:
             pool.write_pages(np.asarray(wp, np.int32),
                              jnp.stack(wk, axis=1), jnp.stack(wv, axis=1))
         pool.span_len = h_new
         pool.round_idx = pend.round_idx
         pool.pending = None
-        return new_span_pages, len(wp)
+        return new_span_pages, len(wp), dedup.hits
 
     @staticmethod
     def _family_block(master: MasterCache, diff, b: int, bt: int):

@@ -3,7 +3,7 @@ restore-ahead prefetch over :class:`~repro.serving.kvpool.PagedKVPool`."""
 from repro.serving.pool.eviction import (EvictionCandidate, EvictionPolicy,
                                          FamilyCostAware, LRUByRound,
                                          get_eviction_policy)
-from repro.serving.pool.histpool import HistoryPagePool, PendingDelta
+from repro.serving.pool.histpool import COWDedup, HistoryPagePool, PendingDelta
 from repro.serving.pool.host import HostEntry, HostTier
 from repro.serving.pool.manager import PoolLedger, PoolManager, Spillable
 from repro.serving.pool.owners import (EVICTION_RANK, TRANSIENT_KINDS,
@@ -14,6 +14,7 @@ from repro.serving.pool.prefetch import PrefetchPlanner
 __all__ = [
     "EVICTION_RANK",
     "TRANSIENT_KINDS",
+    "COWDedup",
     "EvictionCandidate",
     "EvictionPolicy",
     "FamilyCostAware",

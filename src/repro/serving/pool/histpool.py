@@ -59,6 +59,44 @@ class PendingDelta:
     round_idx: int                    # the round whose store recorded it
 
 
+class COWDedup:
+    """Content-addressed page sharing for one copy-on-write batch.
+
+    When several family members dirty the SAME history block and the
+    rewritten contents are bit-identical (the common case: neither
+    mirror's diff covers the block, so both rewrite the Master's bytes),
+    the batch should allocate ONE page and point every member's table at
+    it (refcount > 1) instead of storing the content once per member.
+
+    Keys are ``(block id, K bytes, V bytes)``; a digest-first index keeps
+    lookups cheap and every hit is verified against the stored arrays, so
+    a hash collision can never alias two different contents.
+    """
+
+    def __init__(self) -> None:
+        self._index: Dict[tuple, list] = {}
+        self.hits = 0
+
+    @staticmethod
+    def _digest(block: int, kb: np.ndarray, vb: np.ndarray) -> tuple:
+        return (int(block), hash(kb.tobytes()), hash(vb.tobytes()))
+
+    def match(self, block: int, kb, vb) -> Optional[int]:
+        """Page already holding exactly this content for ``block``, if
+        any (counts a hit), else None."""
+        kb, vb = np.asarray(kb), np.asarray(vb)
+        for page, k0, v0 in self._index.get(self._digest(block, kb, vb), []):
+            if np.array_equal(k0, kb) and np.array_equal(v0, vb):
+                self.hits += 1
+                return page
+        return None
+
+    def insert(self, block: int, kb, vb, page: int) -> None:
+        kb, vb = np.asarray(kb), np.asarray(vb)
+        self._index.setdefault(self._digest(block, kb, vb), []) \
+            .append((int(page), kb, vb))
+
+
 class HistoryPagePool:
     """Persistent page pool for one Master family's restored histories."""
 

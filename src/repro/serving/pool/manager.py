@@ -28,7 +28,8 @@ three mechanisms that turn that hard wall into graceful degradation:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, asdict
+from contextlib import contextmanager
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -58,9 +59,22 @@ class Spillable:
     put: Callable[[Sequence[Any]], None]
 
 
+#: scope bucket used when no committee scope is active on the manager
+DEFAULT_SCOPE = "engine"
+
+
 @dataclass
 class PoolLedger:
-    """Byte/event accounting for tier traffic (the §5 'swap' columns)."""
+    """Byte/event accounting for tier traffic (the §5 'swap' columns).
+
+    Counters are kept twice: once globally (the flat :meth:`snapshot`
+    face the benchmarks read) and once per *scope* — the committee whose
+    phase triggered the traffic (``PoolManager.scope``, gather-group id
+    ``g<c>``; :data:`DEFAULT_SCOPE` when no committee is active). Every
+    :meth:`bump` lands in exactly one scope, so the per-scope counters
+    always sum to the globals (checked by :meth:`PoolManager.check`) and
+    multi-committee stats never blend into one aggregate.
+    """
 
     spill_events: int = 0
     spilled_bytes: int = 0
@@ -74,16 +88,56 @@ class PoolLedger:
     prefetched_reloads: int = 0
     #: consumer touches that found the owner already prefetched
     prefetch_hits: int = 0
+    #: per-committee breakdown of the same counters (scope → counter → n)
+    scopes: Dict[str, Dict[str, int]] = field(default_factory=dict)
+
+    _COUNTERS = ("spill_events", "spilled_bytes", "spilled_pages",
+                 "reload_events", "reloaded_bytes", "reloaded_pages",
+                 "sync_reloads", "prefetched_reloads", "prefetch_hits")
+
+    def bump(self, scope: Optional[str], **deltas: int) -> None:
+        """Advance counters globally AND in ``scope``'s bucket."""
+        bucket = self.scopes.setdefault(scope or DEFAULT_SCOPE, {})
+        for k, d in deltas.items():
+            setattr(self, k, getattr(self, k) + d)
+            bucket[k] = bucket.get(k, 0) + d
 
     def snapshot(self) -> Dict[str, int]:
-        return asdict(self)
+        return {k: getattr(self, k) for k in self._COUNTERS}
 
     def delta(self, prev: Dict[str, int]) -> Dict[str, int]:
         """Counters advanced since ``prev`` (a :meth:`snapshot`), nonzero
         entries only — merged into ``RoundStats`` per round."""
-        now = asdict(self)
+        now = self.snapshot()
         return {k: now[k] - prev.get(k, 0)
                 for k in now if now[k] != prev.get(k, 0)}
+
+    def scoped_snapshot(self) -> Dict[str, Dict[str, int]]:
+        return {s: dict(b) for s, b in self.scopes.items()}
+
+    def scoped_delta(self, prev: Dict[str, Dict[str, int]]
+                     ) -> Dict[str, Dict[str, int]]:
+        """Per-scope counters advanced since a :meth:`scoped_snapshot`,
+        nonzero entries only — the ``by_committee`` breakdown in
+        ``stats.reuse["pool"]``."""
+        out: Dict[str, Dict[str, int]] = {}
+        for s, bucket in self.scopes.items():
+            p = prev.get(s, {})
+            d = {k: v - p.get(k, 0) for k, v in bucket.items()
+                 if v != p.get(k, 0)}
+            if d:
+                out[s] = d
+        return out
+
+    def check_scopes(self) -> None:
+        """Per-scope counters must sum exactly to the globals — a bump
+        that bypassed :meth:`bump` (or double-counted a scope) shows up
+        here."""
+        for k in self._COUNTERS:
+            total = sum(b.get(k, 0) for b in self.scopes.values())
+            assert total == getattr(self, k), \
+                f"ledger scope split broken for {k}: " \
+                f"sum(scopes)={total} != global={getattr(self, k)}"
 
 
 class PoolManager:
@@ -99,11 +153,30 @@ class PoolManager:
         self.prefetch_planner = prefetch if prefetch is not None else PrefetchPlanner()
         self.ledger = PoolLedger()
         self.round_idx = 0
+        #: active committee scope for ledger attribution (gather-group id);
+        #: None books to :data:`DEFAULT_SCOPE`
+        self.scope: Optional[str] = None
+        #: rounds a prefetch stays warm before :meth:`begin_round` expires
+        #: it. 1 (default) matches the synchronized engine's one-round
+        #: lookahead; the continuous engine raises it to ~n_committees
+        #: because its ``begin_round`` clock ticks once per committee-round
+        #: start, not once per global round.
+        self.prefetch_ttl = 1
         self._spillables: Dict[str, Spillable] = {}
         self._last_used: Dict[str, int] = {}
         self._pinned: set = set()
         #: owners reloaded ahead of use → round the prefetch was issued
         self._prefetched: Dict[str, int] = {}
+
+    @contextmanager
+    def scoped(self, scope: Optional[str]):
+        """Attribute all ledger traffic inside the block to ``scope``."""
+        prev = self.scope
+        self.scope = scope
+        try:
+            yield
+        finally:
+            self.scope = prev
 
     # --------------------------------------------------------- allocation
     def alloc(self, owner: str, n_pages: int, *, persistent: bool,
@@ -153,8 +226,8 @@ class PoolManager:
         self._last_used.pop(owner, None)
         self._pinned.discard(owner)
 
-    def free_transient(self) -> None:
-        self.pool.free_transient()
+    def free_transient(self, prefixes: Optional[Sequence[str]] = None) -> None:
+        self.pool.free_transient(prefixes)
 
     # ----------------------------------------------------------- pressure
     def _candidates(self) -> List[EvictionCandidate]:
@@ -206,9 +279,8 @@ class PoolManager:
                                 self.round_idx))
         self.pool.free(owner)
         self.pool.swap_events += 1
-        self.ledger.spill_events += 1
-        self.ledger.spilled_bytes += nbytes
-        self.ledger.spilled_pages += a.n_pages
+        self.ledger.bump(self.scope, spill_events=1, spilled_bytes=nbytes,
+                         spilled_pages=a.n_pages)
         self._prefetched.pop(owner, None)
         return True
 
@@ -228,14 +300,14 @@ class PoolManager:
         sp = self._spillables[owner]
         sp.put([jax.device_put(np.asarray(x)) for x in sp.get()])
         self.pool.swap_events += 1
-        self.ledger.reload_events += 1
-        self.ledger.reloaded_bytes += entry.nbytes
-        self.ledger.reloaded_pages += entry.n_pages
+        self.ledger.bump(self.scope, reload_events=1,
+                         reloaded_bytes=entry.nbytes,
+                         reloaded_pages=entry.n_pages)
         if prefetched:
-            self.ledger.prefetched_reloads += 1
+            self.ledger.bump(self.scope, prefetched_reloads=1)
             self._prefetched[owner] = self.round_idx
         else:
-            self.ledger.sync_reloads += 1
+            self.ledger.bump(self.scope, sync_reloads=1)
         self.touch(owner)
 
     # ------------------------------------------------------------ consume
@@ -247,7 +319,7 @@ class PoolManager:
             self.reload(owner)
         elif owner in self._prefetched:
             self._prefetched.pop(owner)
-            self.ledger.prefetch_hits += 1
+            self.ledger.bump(self.scope, prefetch_hits=1)
         if owner in self.pool._allocs:
             self.touch(owner)
 
@@ -281,9 +353,10 @@ class PoolManager:
     # ------------------------------------------------------------- rounds
     def begin_round(self, round_idx: int) -> None:
         self.round_idx = round_idx
-        # a prefetch that nobody consumed within a round of issue is stale
+        # a prefetch that nobody consumed within prefetch_ttl rounds of
+        # issue is stale (ttl=1: one-round lookahead)
         for owner, stamp in list(self._prefetched.items()):
-            if stamp < round_idx - 1:
+            if stamp < round_idx - self.prefetch_ttl:
                 del self._prefetched[owner]
 
     # --------------------------------------------------------- invariants
@@ -304,3 +377,4 @@ class PoolManager:
         for owner in self.host.owners():
             assert owner not in pool._allocs, \
                 f"{owner} resident in both tiers"
+        self.ledger.check_scopes()

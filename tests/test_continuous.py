@@ -1,0 +1,420 @@
+"""Continuous serving loop (ISSUE 9).
+
+The contract under test: the phase-level work-queue scheduler breaks
+the round barrier WITHOUT changing a single computed value. The
+synchronized ``ServingEngine.serve`` is the bit-exact oracle —
+
+* on a single-committee trace the continuous schedule coincides with
+  the synchronized one call for call: outputs AND logits bit-equal,
+  counted-step makespan equal to the synchronized baseline, zero
+  overlap;
+* on a multi-committee (``SubsetGather.grouped``) trace with staggered
+  arrivals the outputs stay bit-exact per agent while the counted-step
+  makespan drops STRICTLY below the synchronized baseline, because
+  committee A's restore/prefill drains into committee B's decode ticks
+  (spy-pinned, not just counter-asserted);
+* tokens stream per tick (``on_token`` / ``token_ticks``), not at a
+  round barrier.
+
+Layers: scheduler unit tests against a scripted executor (virtual
+clock math, phase ordering, decode-lane budget, determinism), then the
+engine-level parity/overlap suite, then a hypothesis fuzz over random
+staggers and slot budgets against a single cached oracle.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+if os.environ.get("REQUIRE_HYPOTHESIS"):
+    import hypothesis  # noqa: F401  — hard failure: CI must fuzz
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.configs import get_smoke_config
+from repro.core.rounds import SubsetGather, generate_trace
+from repro.models import init_params
+from repro.serving import (
+    ContinuousEngine,
+    Phase,
+    PhaseCost,
+    RoundPlanner,
+    ServiceTimes,
+    ServingEngine,
+    StepScheduler,
+    get_policy,
+)
+
+GEN = 32
+
+
+# ------------------------------------------------------ scheduler (unit)
+class ScriptedExecutor:
+    """Phase costs from a table; records every hook call in order."""
+
+    def __init__(self, costs):
+        self.costs = costs            # {(c, r, phase): PhaseCost}
+        self.begins = []              # (c, r, phase)
+        self.runs = []                # (tick, c, r, phase, k)
+        self.ends = []                # (tick, c, r, phase)
+
+    def phase_begin(self, item):
+        self.begins.append((item.committee, item.round_idx, item.phase))
+        return self.costs.get((item.committee, item.round_idx, item.phase),
+                              PhaseCost(0))
+
+    def run_units(self, item, k, tick):
+        self.runs.append((tick, item.committee, item.round_idx,
+                          item.phase, k))
+
+    def phase_end(self, item, tick):
+        self.ends.append((tick, item.committee, item.round_idx, item.phase))
+
+
+def _costs(n_c, n_r, *, restore=0, prefill=8, decode=7, agents=2):
+    costs = {}
+    for c in range(n_c):
+        for r in range(n_r):
+            costs[(c, r, Phase.RESTORE)] = PhaseCost(restore)
+            costs[(c, r, Phase.PREFILL)] = PhaseCost(prefill)
+            costs[(c, r, Phase.DECODE)] = PhaseCost(
+                decode, unit_slots=agents, per_tick=1)
+    return costs
+
+
+def test_phases_begin_in_lifecycle_order():
+    ex = ScriptedExecutor(_costs(2, 2))
+    StepScheduler(ex, 2, 2, slots_per_step=8).run()
+    order = list(Phase.ORDER)
+    for c in range(2):
+        for r in range(2):
+            seq = [p for (bc, br, p) in ex.begins if (bc, br) == (c, r)]
+            assert seq == order, f"item ({c},{r}) ran phases {seq}"
+
+
+def test_rounds_are_sequential_per_committee():
+    """Round r+1's PLAN must not begin before round r's STORE ended —
+    a committee is a pipeline of rounds, never rounds in parallel."""
+    ex = ScriptedExecutor(_costs(2, 3))
+    StepScheduler(ex, 2, 3, slots_per_step=8).run()
+    for c in range(2):
+        for r in range(2):
+            assert (c, r, Phase.STORE) in [e[1:] for e in ex.ends]
+            # begins is a global ordered call log: round r's STORE must
+            # begin (and, being zero-cost, end) before round r+1's PLAN
+            assert ex.begins.index((c, r + 1, Phase.PLAN)) > \
+                ex.begins.index((c, r, Phase.STORE))
+
+
+def test_decode_is_one_step_per_tick():
+    """The decode lane advances exactly one model step per virtual tick
+    regardless of leftover budget; prefill drains as fast as the slot
+    budget allows."""
+    ex = ScriptedExecutor(_costs(1, 1, prefill=8, decode=7, agents=2))
+    sched = StepScheduler(ex, 1, 1, slots_per_step=8)
+    makespan = sched.run()
+    dec = [e for e in ex.runs if e[3] == Phase.DECODE]
+    assert [k for (_, _, _, _, k) in dec] == [1] * 7
+    assert [t for (t, *_) in dec] == list(range(dec[0][0], dec[0][0] + 7))
+    pre = [e for e in ex.runs if e[3] == Phase.PREFILL]
+    assert len(pre) == 1 and pre[0][4] == 8      # one full-budget tick
+    assert makespan == 1 + 7                     # prefill tick + 7 decode
+    assert sched.sync_makespan() == makespan     # one committee: no slack
+
+
+def test_decode_lane_respects_slot_budget():
+    """Two committees whose steps cannot share one model step (2+2 slots
+    > 3) must serialize their decodes — and in deterministic
+    (round, committee) priority order."""
+    ex = ScriptedExecutor(_costs(2, 1, prefill=3, decode=5, agents=2))
+    StepScheduler(ex, 2, 1, slots_per_step=3).run()
+    t_c0 = [e[0] for e in ex.runs if e[3] == Phase.DECODE and e[1] == 0]
+    t_c1 = [e[0] for e in ex.runs if e[3] == Phase.DECODE and e[1] == 1]
+    assert len(t_c0) == len(t_c1) == 5
+    assert not set(t_c0) & set(t_c1)             # never on the same tick
+    assert min(t_c1) > max(t_c0)                 # committee 0 first
+
+
+def test_stagger_overlaps_and_beats_sync():
+    """With staggered arrivals, committee 1's prefill drains into
+    committee 0's decode ticks: overlap > 0 and the makespan lands
+    strictly below the serialized baseline built from the same costs."""
+    ex = ScriptedExecutor(_costs(2, 2, prefill=16, decode=10, agents=2))
+    sched = StepScheduler(ex, 2, 2, slots_per_step=8, arrivals=[0, 3])
+    makespan = sched.run()
+    assert sched.overlap_steps() > 0
+    assert makespan < sched.sync_makespan()
+
+
+def test_oversized_phase_unit_is_rejected():
+    costs = {(0, 0, Phase.DECODE): PhaseCost(4, unit_slots=9, per_tick=1)}
+    with pytest.raises(AssertionError, match="slots per"):
+        StepScheduler(ScriptedExecutor(costs), 1, 1, slots_per_step=8).run()
+
+
+def test_schedule_is_deterministic():
+    def run():
+        ex = ScriptedExecutor(_costs(3, 2, restore=4, prefill=12,
+                                     decode=9, agents=2))
+        sched = StepScheduler(ex, 3, 2, slots_per_step=7,
+                              arrivals=[0, 2, 5])
+        sched.run()
+        return ([(e.tick, e.committee, e.round_idx, e.phase, e.units)
+                 for e in sched.timeline], ex.begins, ex.ends)
+
+    assert run() == run()
+
+
+# -------------------------------------------------------- engine (model)
+N_AGENTS = 4
+N_ROUNDS = 3
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen2.5-7b").replace(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _trace(cfg, n_agents=N_AGENTS, n_rounds=N_ROUNDS, seed=11):
+    return generate_trace("generative_agents", n_agents, n_rounds,
+                          cfg.vocab_size, seed=seed, jitter_hist=False)
+
+
+def _sync_engine(params, cfg, **kw):
+    return ServingEngine(params, cfg, get_policy("tokendance"), gen_len=GEN,
+                         recompute_ratio=0.1, keep_logits=True, **kw)
+
+
+def _cont_engine(params, cfg, **kw):
+    return ContinuousEngine(params, cfg, "tokendance", gen_len=GEN,
+                            recompute_ratio=0.1, keep_logits=True, **kw)
+
+
+def _oracle_rows(stats, aids):
+    """Per-agent output/logit rows from synchronized RoundStats (rows
+    are stacked in admitted order)."""
+    out = {a: [] for a in aids}
+    lg = {a: [] for a in aids}
+    for stt in stats:
+        admitted = (stt.admission["admitted"] if stt.admission
+                    else list(aids))
+        for i, a in enumerate(admitted):
+            out[a].append(stt.outputs[i])
+            lg[a].append(None if stt.first_logits is None
+                         else stt.first_logits[i])
+    return out, lg
+
+
+def _assert_parity(res, oracle_out, oracle_lg, aids):
+    for a in aids:
+        assert len(res.outputs[a]) == len(oracle_out[a])
+        for got, want in zip(res.outputs[a], oracle_out[a]):
+            np.testing.assert_array_equal(got, want)
+        for got, want in zip(res.logits[a], oracle_lg[a]):
+            if want is None:
+                assert got is None
+            else:
+                np.testing.assert_array_equal(got, want)
+
+
+@pytest.fixture(scope="module")
+def single(setup):
+    """One committee (All-Gather): oracle serve + continuous serve with
+    an on_token stream collector."""
+    cfg, params = setup
+    oracle = _sync_engine(params, cfg)
+    o_stats = oracle.serve(_trace(cfg))
+    cont = _cont_engine(params, cfg)
+    stream = []
+    res = cont.serve(_trace(cfg),
+                     on_token=lambda a, r, t, tok, tick:
+                     stream.append((a, r, t, tok, tick)))
+    return o_stats, cont, res, stream
+
+
+def test_single_committee_is_bit_exact_oracle(single):
+    """The acceptance bar: one committee → schedules coincide, outputs
+    AND logits bit-equal, makespan equal to the synchronized baseline,
+    zero overlap (there is nothing to overlap with)."""
+    o_stats, cont, res, _ = single
+    aids = [f"agent{i}" for i in range(N_AGENTS)]
+    oracle_out, oracle_lg = _oracle_rows(o_stats, aids)
+    _assert_parity(res, oracle_out, oracle_lg, aids)
+    assert res.makespan_steps == res.sync_makespan_steps
+    assert res.overlap_steps == 0
+    assert res.restore_overlap_events == 0
+    assert len(res.stats[0]) == N_ROUNDS
+    cont.engine.manager.check()
+
+
+def test_tokens_stream_per_tick(single):
+    """Streaming face: each agent's round produces GEN tokens stamped
+    with nondecreasing ticks inside the makespan, the stream callback
+    saw exactly the final outputs, and later rounds stream later."""
+    _, _, res, stream = single
+    aids = list(res.token_ticks)
+    for a in aids:
+        assert len(res.token_ticks[a]) == N_ROUNDS
+        prev_last = -1
+        for r, ticks in enumerate(res.token_ticks[a]):
+            assert len(ticks) == GEN
+            assert ticks == sorted(ticks)
+            assert ticks[0] > prev_last       # rounds do not interleave
+            assert ticks[-1] <= res.makespan_steps
+            prev_last = ticks[-1]
+    # the callback's token sequence == the stored outputs, and its tick
+    # stamps match token_ticks (offset by one: slot 0 is the prefill's
+    # greedy token, stamped at the prefill end tick)
+    by_round = {}
+    for (a, r, t, tok, tick) in stream:
+        by_round.setdefault((a, r), []).append((t, tok, tick))
+    for a in aids:
+        for r in range(N_ROUNDS):
+            ev = by_round[(a, r)]
+            assert [t for (t, _, _) in ev] == list(range(1, GEN))
+            np.testing.assert_array_equal(
+                [tok for (_, tok, _) in ev], res.outputs[a][r][1:])
+            assert [tick for (_, _, tick) in ev] == \
+                res.token_ticks[a][r][1:]
+
+
+def test_planner_admission_matches_synchronized(setup):
+    """RoundPlanner admission, lookahead and observe feedback plug into
+    the continuous loop with the synchronized engine's semantics: same
+    admitted/deferred rotation, same outputs."""
+    cfg, params = setup
+
+    def measure(n):
+        return ServiceTimes(per_request_recover=0.1,
+                            collective_recover=0.15, decode=0.05,
+                            collective=False)
+
+    def planner():
+        return RoundPlanner(measure=measure, qps=2.0, slo_s=0.35)
+
+    oracle = _sync_engine(params, cfg)
+    o_stats = oracle.serve(_trace(cfg), planner=planner())
+    cont = _cont_engine(params, cfg)
+    res = cont.serve(_trace(cfg), planner=planner())
+    aids = [f"agent{i}" for i in range(N_AGENTS)]
+    for o, c in zip(o_stats, res.stats[0]):
+        assert o.admission["admitted"] == c.admission["admitted"]
+        assert o.admission["deferred"] == c.admission["deferred"]
+    oracle_out, oracle_lg = _oracle_rows(o_stats, aids)
+    _assert_parity(res, oracle_out, oracle_lg, aids)
+
+
+# ------------------------------------------- multi-committee + overlap
+N_MULTI = 6
+R_MULTI = 2
+STAGGER = (0, 5, 9)
+
+
+@pytest.fixture(scope="module")
+def multi(setup):
+    """Three committees of two, staggered arrivals. The oracle is the
+    synchronized serve on the same grouped topology (its outputs do not
+    depend on arrival order). A spy wraps ``policy.plan`` to record, at
+    restore time, which OTHER committees hold an in-flight decode."""
+    cfg, params = setup
+    aids = [f"agent{i}" for i in range(N_MULTI)]
+    topo = SubsetGather.grouped(aids, 2)
+    trace = _trace(cfg, N_MULTI, R_MULTI)
+    oracle = _sync_engine(params, cfg, topology=topo)
+    o_stats = oracle.serve(_trace(cfg, N_MULTI, R_MULTI))
+    cont = _cont_engine(params, cfg, topology=topo)
+    plan_log = []
+    orig_plan = cont.engine.policy.plan
+
+    def spy_plan(ctx):
+        mine = int(ctx.gid[1:].split(".")[0])
+        decoding = {it.committee for it in cont.scheduler.items.values()
+                    if it.phase == Phase.DECODE and it.started
+                    and it.units_left > 0}
+        plan_log.append((mine, decoding))
+        return orig_plan(ctx)
+
+    cont.engine.policy.plan = spy_plan
+    res = cont.serve(trace, stagger=list(STAGGER))
+    cont.engine.policy.plan = orig_plan
+    return aids, o_stats, cont, res, plan_log
+
+
+def test_multi_committee_parity_bit_exact(multi):
+    aids, o_stats, cont, res, _ = multi
+    oracle_out, oracle_lg = _oracle_rows(o_stats, aids)
+    _assert_parity(res, oracle_out, oracle_lg, aids)
+    assert all(len(res.stats[c]) == R_MULTI for c in res.stats)
+    cont.engine.manager.check()
+    for pool in cont.engine.policy.hist_pools.values():
+        pool.check()
+
+
+def test_multi_committee_breaks_the_round_barrier(multi):
+    """The tentpole's reason to exist: counted-step makespan strictly
+    below the synchronized baseline on the same recorded costs, with
+    real cross-committee overlap on the timeline."""
+    _, _, _, res, _ = multi
+    assert res.makespan_steps < res.sync_makespan_steps
+    assert res.overlap_steps > 0
+
+
+def test_restore_executes_during_other_committees_decode(multi):
+    """Spy-pinned (not self-reported): at least one committee's restore
+    planning ran while a DIFFERENT committee's decode held undrained
+    steps — the work the round barrier would have serialized."""
+    _, _, _, res, plan_log = multi
+    witnessed = [(c, decs) for (c, decs) in plan_log if decs - {c}]
+    assert witnessed, f"no overlapped restore in {plan_log}"
+    assert res.restore_overlap_events > 0
+
+
+def test_pool_delta_scoped_per_committee(multi):
+    """S2 face at the continuous level: each committee-round's pool
+    delta is drawn from that committee's ledger scope only."""
+    _, _, cont, res, _ = multi
+    cont.engine.manager.ledger.check_scopes()
+    scoped = cont.engine.manager.ledger.scoped_snapshot()
+    assert set(scoped) <= {"engine", "g0", "g1", "g2"}
+    for c, stats in res.stats.items():
+        for stt in stats:
+            pool = stt.reuse["pool"]
+            assert pool["persistent_device_bytes"] >= 0
+            for k, v in pool.items():
+                if k.endswith("_bytes"):
+                    continue
+                assert v <= getattr(cont.engine.manager.ledger, k)
+
+
+# ---------------------------------------------------------------- fuzz
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=3, deadline=None, derandomize=True)
+    @given(data=st.data())
+    def test_fuzz_stagger_never_changes_outputs(setup, multi, data):
+        """Random arrival staggers and slot budgets over the grouped
+        trace: the schedule moves, the values never do — continuous ==
+        synchronized bit-exact, and any schedule with real overlap
+        finishes strictly under the serialized baseline."""
+        cfg, params = setup
+        aids, o_stats, _, _, _ = multi
+        stagger = data.draw(
+            st.lists(st.integers(min_value=0, max_value=12),
+                     min_size=3, max_size=3), label="stagger")
+        slots = data.draw(st.sampled_from([4, 8, 16]), label="slots")
+        topo = SubsetGather.grouped(aids, 2)
+        cont = _cont_engine(params, cfg, topology=topo,
+                            slots_per_step=slots)
+        res = cont.serve(_trace(cfg, N_MULTI, R_MULTI), stagger=stagger)
+        oracle_out, oracle_lg = _oracle_rows(o_stats, aids)
+        _assert_parity(res, oracle_out, oracle_lg, aids)
+        assert res.makespan_steps <= res.sync_makespan_steps
+        if res.overlap_steps:
+            assert res.makespan_steps < res.sync_makespan_steps
+        cont.engine.manager.check()

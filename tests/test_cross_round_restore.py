@@ -48,7 +48,8 @@ from repro.core.rounds import SubsetGather, generate_trace
 from repro.core.segments import PagedSegmentCacheEntry
 from repro.models import init_params
 from repro.serving import RoundPlan, ServingEngine, TokenDancePolicy
-from repro.serving.pool import HistoryPagePool, hist_pool_owner
+from repro.serving.pool import (COWDedup, HistoryPagePool, PendingDelta,
+                                hist_pool_owner)
 
 GEN = 32
 
@@ -436,3 +437,155 @@ def test_deferred_member_invalidates_then_recovers(setup):
     by_mirrors = {i["n_mirrors"]: i["incremental"] for i in infos}
     assert by_mirrors.get(1) is True, infos    # (agent0, agent1) delta path
     assert by_mirrors.get(0) is False, infos   # (agent2,) still bootstrapping
+
+
+# -------------------------------------- cross-member COW dedup (ISSUE 9)
+def test_cow_dedup_index_unit():
+    """Content-addressed matching: same (block, bytes) shares a page,
+    different block or different bytes never does, and every hit is
+    verified against the stored arrays (a digest collision cannot
+    alias)."""
+    rng = np.random.default_rng(0)
+    kb = rng.normal(size=(2, 16, 2, 8)).astype(np.float32)
+    vb = rng.normal(size=(2, 16, 2, 8)).astype(np.float32)
+    d = COWDedup()
+    assert d.match(3, kb, vb) is None            # empty index
+    d.insert(3, kb, vb, 7)
+    assert d.match(3, kb, vb) == 7
+    assert d.hits == 1
+    assert d.match(4, kb, vb) is None            # same bytes, other block
+    kb2 = kb.copy()
+    kb2[0, 0, 0, 0] += 1.0
+    assert d.match(3, kb2, vb) is None           # same block, other bytes
+    d.insert(3, kb2, vb, 9)
+    assert d.match(3, kb2, vb) == 9
+    assert d.match(3, kb, vb) == 7               # both contents retrievable
+    assert d.hits == 3
+
+
+def test_apply_pending_cow_dedup_shares_identical_blocks():
+    """S1 core, counted in pool pages: when several family members dirty
+    the SAME history block and the rewritten contents are bit-identical
+    (no mirror diff covers the block, so everyone rewrites the Master's
+    bytes), ``_apply_pending`` writes ONE page and points every such
+    member's table at it (refcount > 1) — and every member's full
+    restored span stays bit-exact."""
+    from types import SimpleNamespace
+
+    rng = np.random.default_rng(8)
+    master, handles, caches, bt = _family(rng, 3, nb=6)
+    h_prev, h_new = 4 * bt, 6 * bt
+    nb_prev = h_prev // bt
+    members = [f"r{i}" for i in range(3)]
+    # bootstrap the pool over the prefix, exactly the policy's full path
+    pre = trim_family(handles, h_prev)
+    pool_k, pool_v, page_idx = fused_restore_family_shared(pre)
+    tables = {"r0": np.arange(nb_prev, dtype=np.int32),
+              "r1": np.asarray(page_idx[0], np.int32),
+              "r2": np.asarray(page_idx[1], np.int32)}
+    hp = HistoryPagePool(tuple(members), pool_k, pool_v, tables,
+                         h_prev, bt, 0)
+    hp.check()
+    # a prefix block neither mirror's diff covers: every member's
+    # round-family content for it is the Master's bytes
+    covered = {int(x) for h in handles for x in h.diff.block_idx}
+    clean = [b for b in range(nb_prev) if b not in covered]
+    assert clean, "family left no clean prefix block (seed artifact)"
+    b = clean[0]
+    # one block only ONE mirror deviates on: master + the other mirror
+    # still share, the deviating mirror gets its own page
+    half = [b2 for b2 in range(nb_prev)
+            if sum(b2 in set(map(int, h.diff.block_idx))
+                   for h in handles) == 1]
+    dirty = {a: np.asarray([b] + ([half[0]] if half else []), np.int32)
+             for a in members}
+    hp.pending = PendingDelta(h_prev=h_prev, h_new=h_new,
+                              dirty=dirty, round_idx=1)
+    pol = TokenDancePolicy()
+    pol.rt = SimpleNamespace(
+        cfg=SimpleNamespace(n_layers=2, n_kv_heads=2, resolved_head_dim=8),
+        sessions={
+            "r0": SimpleNamespace(is_master=True, mirror=None),
+            "r1": SimpleNamespace(is_master=False, mirror=handles[0]),
+            "r2": SimpleNamespace(is_master=False, mirror=handles[1]),
+        })
+    new_span, cow_pages, cow_hits = pol._apply_pending(
+        hp, tuple(members), master)
+    total_marks = sum(t.size for t in dirty.values())
+    assert cow_pages + cow_hits == total_marks      # nothing double-stored
+    assert cow_hits >= 2                            # b shared by all three
+    # the fully-clean block landed on ONE page referenced by everyone
+    pages_b = {int(hp.page_tables[a][b]) for a in members}
+    assert len(pages_b) == 1
+    assert hp.refcount[pages_b.pop()] == 3
+    if half:
+        owners = {a: int(hp.page_tables[a][half[0]]) for a in members}
+        deviant = members[1 + [i for i, h in enumerate(handles)
+                               if half[0] in set(map(int, h.diff.block_idx))
+                               ][0]]
+        sharers = [a for a in members if a != deviant]
+        assert owners[sharers[0]] == owners[sharers[1]]
+        assert owners[deviant] != owners[sharers[0]]
+    assert hp.span_len == h_new and hp.pending is None
+    hp.check()
+    # bit-exactness of the advanced pool: every member's every block
+    # gathers its own round-family content
+    pk = np.asarray(hp.pool_k)
+    pv = np.asarray(hp.pool_v)
+    for i, a in enumerate(members):
+        for blk in range(h_new // bt):
+            page = int(hp.page_tables[a][blk])
+            np.testing.assert_array_equal(
+                pk[:, page], caches[i][:, blk * bt:(blk + 1) * bt])
+            np.testing.assert_array_equal(
+                pv[:, page], -caches[i][:, blk * bt:(blk + 1) * bt])
+    delta = trim_family(handles, h_new, start=h_prev)
+    ndb = max(1, max(h.diff.n_blocks for h in delta))
+    assert new_span == (h_new - h_prev) // bt + len(delta) * ndb
+
+
+def test_forced_dirty_marks_are_correctness_neutral(setup):
+    """S1 at engine level: extra dirty marks (every member re-marks one
+    prefix block) change page accounting, never values — outputs and
+    logits stay equal to the full-restore engine, and cow_pages +
+    cow_dedup_hits account for every mark."""
+    cfg, params = setup
+    trace = generate_trace("generative_agents", 3, 3, cfg.vocab_size,
+                           seed=11, jitter_hist=False)
+    engines = _make_engines(cfg, params)
+    inc, full = engines["inc"], engines["full"]
+    inc.init_agents(trace)
+    full.init_agents(trace)
+    for r in (0, 1):
+        si = inc.run_round(trace.rounds[r])
+        sf = full.run_round(trace.rounds[r])
+        np.testing.assert_array_equal(si.outputs, sf.outputs)
+    (fam, pool), = inc.policy.hist_pools.items()
+    pend = pool.pending
+    assert pend is not None                      # store(1) recorded a delta
+    already = {int(x) for a in fam
+               for x in np.asarray(pend.dirty.get(a, []), np.int64).ravel()}
+    b = next(x for x in range(pend.h_prev // pool.block_tokens)
+             if x not in already)
+    for a in fam:
+        cur = np.asarray(pend.dirty.get(a, np.zeros(0, np.int32)))
+        pend.dirty[a] = np.concatenate([cur, [b]]).astype(np.int32)
+    total_marks = sum(int(np.asarray(pend.dirty[a]).size) for a in fam)
+    si = inc.run_round(trace.rounds[2])
+    sf = full.run_round(trace.rounds[2])
+    np.testing.assert_array_equal(si.outputs, sf.outputs)
+    np.testing.assert_array_equal(si.first_logits, sf.first_logits)
+    ri = si.reuse["restore"]
+    assert ri["incremental"] is True
+    assert ri["cow_pages"] + ri["cow_dedup_hits"] == total_marks, ri
+    # members whose mirror diff does NOT cover b all rewrite the
+    # Master's bytes for it — those rewrites share one page
+    sharers = [a for a in fam
+               if inc.sessions[a].is_master
+               or b not in set(map(int,
+                                   inc.sessions[a].mirror.diff.block_idx))]
+    if len(sharers) >= 2:
+        assert len({int(pool.page_tables[a][b]) for a in sharers}) == 1
+        assert ri["cow_dedup_hits"] >= len(sharers) - 1, ri
+    pool.check()
+    inc.manager.check()

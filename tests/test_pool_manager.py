@@ -222,6 +222,96 @@ def test_stale_prefetch_stamp_expires():
     assert mgr.ledger.prefetch_hits == 0
 
 
+# ------------------------------------------- per-committee scopes (ISSUE 9)
+def test_ledger_scopes_partition_the_globals():
+    """Every counter bump lands in exactly one scope bucket; the scoped
+    totals sum back to the globals (check_scopes is the invariant the
+    manager's check() now enforces)."""
+    pool, mgr = _pool(16)
+    box = _Box(30)
+    mgr.alloc("hist:a", 2, persistent=True, spillable=box.spillable())
+    mgr.begin_round(1)
+    with mgr.scoped("g0"):
+        assert mgr.spill("hist:a")
+    with mgr.scoped("g1"):
+        mgr.reload("hist:a")
+    snap = mgr.ledger.scoped_snapshot()
+    assert snap["g0"]["spill_events"] == 1
+    assert "reload_events" not in snap["g0"]
+    assert snap["g1"]["reload_events"] == 1
+    assert snap["g1"]["reloaded_pages"] == 2
+    mgr.ledger.check_scopes()
+    mgr.check()
+
+
+def test_ledger_unscoped_bumps_land_in_engine_scope():
+    pool, mgr = _pool(16)
+    mgr.alloc("hist:a", 2, persistent=True, spillable=_Box(31).spillable())
+    mgr.begin_round(1)
+    mgr.spill("hist:a")                       # no scope active
+    assert mgr.ledger.scoped_snapshot()["engine"]["spill_events"] == 1
+    mgr.ledger.check_scopes()
+
+
+def test_scoped_delta_reports_new_work_only():
+    pool, mgr = _pool(16)
+    mgr.alloc("hist:a", 2, persistent=True, spillable=_Box(32).spillable())
+    mgr.alloc("hist:b", 2, persistent=True, spillable=_Box(33).spillable())
+    mgr.begin_round(1)
+    with mgr.scoped("g0"):
+        mgr.spill("hist:a")
+    before = mgr.ledger.scoped_snapshot()
+    with mgr.scoped("g1"):
+        mgr.spill("hist:b")
+        mgr.reload("hist:b")
+    delta = mgr.ledger.scoped_delta(before)
+    assert set(delta) == {"g1"}               # g0's old work not re-reported
+    assert delta["g1"]["spill_events"] == 1
+    assert delta["g1"]["reload_events"] == 1
+    # nested scopes restore the outer scope on exit
+    with mgr.scoped("g0"):
+        with mgr.scoped("g1"):
+            pass
+        assert mgr.scope == "g0"
+    assert mgr.scope is None
+
+
+def test_round_stats_split_pool_delta_by_committee(setup):
+    """S2 at engine level: two committees whose family state was spilled
+    between rounds each reload THEIR OWN state inside their group scope
+    — run_round's reuse["pool"] gains a by_committee breakdown whose
+    counters stay consistent with the global ledger."""
+    cfg, params = setup
+    from repro.core.rounds import SubsetGather
+    topo = SubsetGather.grouped([f"agent{i}" for i in range(N_AGENTS)], 2)
+    eng = _mk_engine(params, cfg, topology=topo)
+    trace = _trace(cfg, 2)
+    eng.init_agents(trace)
+    s0 = eng.run_round(trace.rounds[0])
+    assert "by_committee" not in s0.reuse["pool"]   # no scoped work yet
+    # every committee's compressed family state off-device between rounds
+    spilled = [o for o in list(eng.pool._allocs)
+               if parse_owner(o).kind in ("master", "mirrors", "histpool")
+               and eng.manager.spill(o)]
+    assert spilled, "nothing spilled — scenario is vacuous"
+    s1 = eng.run_round(trace.rounds[1])
+    by = s1.reuse["pool"]["by_committee"]
+    assert set(by) <= {"g0", "g1", "engine"}
+    for g in ("g0", "g1"):                    # each committee reloaded
+        assert by[g]["reload_events"] >= 1, by
+    led = eng.manager.ledger
+    led.check_scopes()
+    totals = {}
+    for d in by.values():
+        for k, v in d.items():
+            totals[k] = totals.get(k, 0) + v
+    for k, v in totals.items():
+        assert 0 < v <= getattr(led, k), (k, v)
+    assert sum(d.get("reload_events", 0) for d in by.values()) \
+        == led.reload_events
+    eng.manager.check()
+
+
 # ------------------------------------------------------------ invariants
 def test_invariants_under_random_ops():
     """Seeded random alloc/free/spill/reload/next-round churn: page

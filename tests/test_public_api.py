@@ -50,6 +50,14 @@ SERVING_API = {
     "DenseRoundKV",
     "PagedRoundKV",
     "round_kv",
+    # continuous serving loop (ISSUE 9)
+    "ContinuousEngine",
+    "ContinuousResult",
+    "Phase",
+    "PhaseCost",
+    "StepEvent",
+    "StepScheduler",
+    "WorkItem",
 }
 
 CORE_API = {
